@@ -1,0 +1,21 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+
+import sys
+import time
+from typing import Callable, Optional
+
+sys.path.insert(0, "src")
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """Run fn repeats times; return (result, µs/call)."""
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,71 @@
+"""Fig. 1 reproduction.
+
+Left (hardware sensitivity): mean latency of iSLIP- vs EDRRM- vs RR-based
+switches under uniform vs bursty traffic — different schedulers win different
+patterns.  Right (protocol sensitivity): goodput of a standard Ethernet stack
+vs the SPAC compressed protocol on small-payload traffic.
+"""
+
+import numpy as np
+
+from .common import emit, timed
+
+
+def run():
+    from repro.core import (SchedulerKind, SwitchArch, ForwardTableKind, VOQKind,
+                            analyze, bind, compressed_protocol, ethernet_ipv4_udp)
+    from repro.sim import annotate, run_netsim, run_surrogate
+    from repro.traces import hft, uniform
+
+    bound = bind(compressed_protocol(addr_bits=4, length_bits=8), flit_bits=256)
+    traces = {
+        # uniform() spreads `load` across n_ports sources: 7.2 ~= 90% per port,
+        # where matching efficiency (not fixed arbitration latency) dominates
+        "uniform": uniform(seed=0, load=7.2, payload=256),
+        "bursty": hft(seed=0, load=0.55),
+    }
+    lat = {}
+    for sched in (SchedulerKind.RR, SchedulerKind.ISLIP, SchedulerKind.EDRRM):
+        arch = SwitchArch(n_ports=8, bus_bits=256, fwd=ForwardTableKind.FULL_LOOKUP,
+                          voq=VOQKind.NXN, sched=sched, voq_depth=256, addr_bits=4)
+        for tname, tr in traces.items():
+            hw = annotate(arch, bound, source="cycle_sim",
+                          i_burst=analyze(tr).i_burst)
+            res, us = timed(run_netsim, arch, bound, tr, hw=hw, repeats=2)
+            lat[(sched.value, tname)] = float(res.mean_latency_ns)
+            emit(f"fig1/{sched.value}/{tname}", us,
+                 f"mean_latency_ns={lat[(sched.value, tname)]:.1f}")
+    # the sensitivity claims (Fig 1 left): iSLIP favours uniform (vs RR's
+    # pointer-sync losses), EDRRM favours bursts (exhaustive service)
+    emit("fig1/check_uniform", 0.0,
+         f"islip<rr on uniform: {lat[('islip','uniform')] < lat[('rr','uniform')]} "
+         f"(islip={lat[('islip','uniform')]:.0f} rr={lat[('rr','uniform')]:.0f} "
+         f"edrrm={lat[('edrrm','uniform')]:.0f})")
+    emit("fig1/check_bursty", 0.0,
+         f"edrrm<=islip on bursty: {lat[('edrrm','bursty')] <= lat[('islip','bursty')]} "
+         f"(edrrm={lat[('edrrm','bursty')]:.0f} islip={lat[('islip','bursty')]:.0f})")
+
+    # right panel: protocol sensitivity on 24B payloads
+    eth = bind(ethernet_ipv4_udp(), flit_bits=256)
+    arch = SwitchArch(n_ports=8, bus_bits=256, fwd=ForwardTableKind.MULTIBANK_HASH,
+                      voq=VOQKind.NXN, sched=SchedulerKind.ISLIP, voq_depth=256,
+                      addr_bits=12)
+    # high offered load: with 42 B headers on 24 B payloads the wire rate
+    # exceeds the 10G link; the compressed protocol does not (link modelled
+    # by the netsim host serialisation)
+    # hft() divides `load` by n_ports per source; 9.0 ~= 1.1x per-source line
+    # rate under 42B headers (saturating) but only 0.46x under the 3B header
+    tr = hft(seed=1, load=9.0)
+    good = {}
+    for pname, b in (("ethernet", eth), ("custom", bound)):
+        v, us = timed(run_netsim, arch, b, tr, repeats=2)
+        wire = tr.payload_bytes.mean() + b.header_bytes
+        good[pname] = v.throughput_gbps * float(tr.payload_bytes.mean() / wire)
+        emit(f"fig1/protocol/{pname}", us, f"goodput_gbps={good[pname]:.2f}")
+    emit("fig1/protocol/gain", 0.0,
+         f"custom/ethernet goodput = {good['custom'] / good['ethernet']:.2f}x")
+    return lat, good
+
+
+if __name__ == "__main__":
+    run()

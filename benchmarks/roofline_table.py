@@ -1,0 +1,39 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and prints the three-term roofline per
+(arch × shape × mesh) cell plus dominant bottleneck and useful-FLOPs ratio.
+"""
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run(dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    if not rows:
+        emit("roofline/none", 0.0, f"no dry-run artifacts in {dryrun_dir}")
+        return []
+    for r in rows:
+        t = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+             f"compute={t['compute_s']*1e3:.2f}ms mem={t['memory_s']*1e3:.2f}ms "
+             f"coll={t['collective_s']*1e3:.2f}ms dom={t['dominant']} "
+             f"useful={t['useful_flops_ratio']:.2f} "
+             f"roofline={t['roofline_fraction']:.2%} "
+             f"live={r['bytes_per_device_live']/1e9:.1f}GB fits={r['fits_16gb']}")
+    doms = {}
+    for r in rows:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    emit("roofline/summary", 0.0,
+         f"{len(rows)} cells; dominance: " + "; ".join(f"{k}={v}" for k, v in doms.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

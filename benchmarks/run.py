@@ -1,0 +1,48 @@
+"""Benchmark harness — one entry per paper table/figure + the TPU-side fabric
+microbench and the dry-run roofline table.
+
+Emits ``name,us_per_call,derived`` CSV rows (derived strings use ';'
+separators so the CSV stays 3 columns).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig7 table2
+"""
+
+import sys
+import time
+import traceback
+
+from . import (fig1_sensitivity, fig6_fidelity, fig7_dse_pareto, fig8_scaling,
+               moe_fabric, roofline_table, table1_resources, table2_adaptation)
+
+SUITES = {
+    "table1": table1_resources.run,
+    "fig1": fig1_sensitivity.run,
+    "fig6": fig6_fidelity.run,
+    "fig7": fig7_dse_pareto.run,
+    "fig8": fig8_scaling.run,
+    "table2": table2_adaptation.run,
+    "roofline": roofline_table.run,
+    "moe_fabric": moe_fabric.run,
+}
+
+
+def main() -> None:
+    wanted = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        t0 = time.time()
+        try:
+            SUITES[name]()
+            print(f"{name}/TOTAL,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception:  # noqa: BLE001 - keep the harness running
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/TOTAL,{(time.time() - t0) * 1e6:.0f},FAILED")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Table I reproduction: unloaded datapath resources/latency/fmax/throughput.
+
+Prints the calibrated model's numbers next to the published ones for every
+SPAC row, plus the SPAC Core-Only comparison against the P4 toolchains.
+"""
+
+from .common import emit, timed
+
+
+def run():
+    from repro.core import (SchedulerKind, SwitchArch, ForwardTableKind, VOQKind,
+                            bind, compressed_protocol, ethernet_ipv4_udp)
+    from repro.sim import synthesize
+    from repro.sim.resources import TABLE1_SPAC_ROWS
+
+    eth = bind(ethernet_ipv4_udp(), flit_bits=512)
+    cmp16 = bind(compressed_protocol(), flit_bits=256)
+    names = ["SPAC-Ethernet-512b-8p", "SPAC-Ethernet-512b-16p",
+             "SPAC-Basic-256b-8p", "SPAC-Basic-256b-16p"]
+    print("# Table I: model vs paper (LUTk/FFk/BRAM/fmax/latency/throughput)")
+    worst = 0.0
+    for name, ((arch, hdr), lut, ff, bram, fmax, lat) in zip(names, TABLE1_SPAC_ROWS):
+        bound = eth if hdr > 100 else cmp16
+        (r, us) = timed(synthesize, arch, bound)
+        row = (f"model {r.luts/1e3:6.1f}k/{r.ffs/1e3:6.1f}k/{r.brams:4.0f}/"
+               f"{r.fmax_mhz:4.0f}MHz/{r.latency_ns:6.1f}ns/{r.max_throughput_gbps:5.1f}G"
+               f" | paper {lut}k/{ff}k/{bram}/{fmax}MHz/{lat}ns")
+        for mine, ref in ((r.luts / 1e3, lut), (r.brams, bram),
+                          (r.fmax_mhz, fmax), (r.latency_ns, lat)):
+            worst = max(worst, abs(mine / ref - 1))
+        emit(f"table1/{name}", us, row.replace(",", ";"))
+    # Core-Only vs P4 compilers (paper: lower LUTs + 1.4-2.0x frequency)
+    core = SwitchArch(n_ports=2, bus_bits=256, fwd=ForwardTableKind.FULL_LOOKUP,
+                      voq=VOQKind.NXN, sched=SchedulerKind.RR, voq_depth=4,
+                      addr_bits=4)
+    r = synthesize(core, cmp16)
+    emit("table1/SPAC-Core-Only", 0.0,
+         f"model {r.luts/1e3:.1f}k LUT; fmax {r.fmax_mhz:.0f}MHz "
+         f"(paper 4.47k; 350MHz; P4THLS 250MHz; VitisNetP4 259MHz)".replace(",", ";"))
+    emit("table1/worst_rel_error", 0.0, f"{worst:.1%} across SPAC rows")
+    return worst
+
+
+if __name__ == "__main__":
+    run()

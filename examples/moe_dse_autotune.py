@@ -1,0 +1,58 @@
+"""Beyond-paper demo: SPAC's Algorithm 1 auto-tuning the MoE dispatch fabric.
+
+The layer's token→expert traffic is extracted as a routing trace (packets →
+output ports), the DSE sizes the capacity factor from the expert-load
+histogram at a target token-drop rate (the paper's VOQ-depth sizing), picks
+the payload protocol (bf16 vs int8 wire format) and the all-to-all schedule,
+then verifies on the real fabric.
+
+    PYTHONPATH=src python examples/moe_dse_autotune.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import autotune_moe
+from repro.models import SINGLE_POD_PLAN, ModelConfig, MoEOptions
+from repro.models.moe import apply_moe, init_moe
+
+
+def main():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = ModelConfig(name="moe-demo", family="moe", n_layers=1, d_model=512,
+                      n_heads=8, n_kv_heads=4, d_ff=1024, vocab=1000,
+                      moe_experts=32, moe_topk=4)
+    plan = SINGLE_POD_PLAN
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, plan)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256, 512), jnp.bfloat16)
+
+    # fixed general-purpose baseline (the "SPAC Ethernet" of the fabric)
+    _, aux = apply_moe(params, cfg, plan, mesh, x, MoEOptions(capacity_factor=1.25))
+    load = np.asarray(aux["expert_load"], float)
+    print(f"baseline  : cf=1.25/bf16/a2a×1  drop={float(aux['drop_frac']):.4f} "
+          f"load_cv={load.std()/load.mean():.2f}")
+
+    # analytics modelled at 16-way expert parallelism (the production mesh)
+    result, problem = autotune_moe(params, cfg, plan, mesh, x, model_tp=16,
+                                   verbose=True)
+    print()
+    print(result.summary())
+    best = result.best
+    print(f"\nselected CommSpec : {best.short()}")
+    print(f"verified drop     : {result.best_verify.drop_rate:.4f} "
+          f"(target ε=2e-2, statistical sizing from the routing trace)")
+    print(f"dispatch buffers  : {problem._buffer_bytes(best)/1e6:.2f} MB/device "
+          f"(wire {problem._a2a_bytes(best)/1e6:.2f} MB/step)")
+    print("\nPareto front:")
+    for c, v in result.pareto:
+        print(f"  {c.short():32s} step≈{v.p99_latency_ns/1e3:.1f}µs drop={v.drop_rate:.4f}")
+
+
+if __name__ == "__main__":
+    main()

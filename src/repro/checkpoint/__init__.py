@@ -1,0 +1,3 @@
+"""Mesh-agnostic checkpointing with async snapshots."""
+from .store import AsyncCheckpointer, latest_step, restore, save
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

@@ -1,0 +1,135 @@
+"""Checkpointing: mesh-agnostic save/restore with async snapshots.
+
+Layout:  <dir>/step_<N>/
+           manifest.json     — tree structure, shapes/dtypes, step, metadata
+           <idx>.npy         — one file per leaf (gathered to host)
+
+Arrays are saved unsharded (host-gathered), which makes checkpoints
+*mesh-agnostic*: restore onto any device count / sharding plan (the elastic
+re-mesh path in ``repro.runtime.elastic``).  ``AsyncCheckpointer`` snapshots
+to host memory synchronously (cheap) and writes to disk on a background
+thread, so the training loop never blocks on IO — the standard large-run
+pattern.  At multi-thousand-node scale the same manifest format would point
+at per-shard files; that variant is sketched in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NATIVE = set("?bhilqBHILQefdgFDG")  # numpy kind chars that np.save round-trips
+
+
+def _to_disk(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.char in _NATIVE or arr.dtype.kind in "iufb":
+        return arr
+    return np.ascontiguousarray(arr).view(np.uint8)   # e.g. bfloat16
+
+
+def _from_disk(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    dt = jnp.dtype(dtype_str)
+    if arr.dtype == dt:
+        return arr
+    return arr.view(dt)
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(jax.device_get(l)) for l in leaves]
+    for i, arr in enumerate(host):
+        np.save(os.path.join(tmp, f"{i}.npy"), _to_disk(arr))
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "shapes": [list(a.shape) for a in host],
+        "dtypes": [str(a.dtype) for a in host],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)                      # atomic publish
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None, *, template=None,
+            shardings=None) -> Tuple[Any, Dict]:
+    """Restore a tree; optionally resharded onto ``shardings`` (same treedef)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = [_from_disk(np.load(os.path.join(path, f"{i}.npy")), dt)
+              for i, dt in zip(range(manifest["n_leaves"]), manifest["dtypes"])]
+    if template is None:
+        raise ValueError("restore() requires a template tree for structure")
+    _, treedef = jax.tree.flatten(template)
+    if shardings is not None:
+        shard_leaves = jax.tree.leaves(shardings)
+        leaves = [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves)]
+    tree = jax.tree.unflatten(treedef, leaves)
+    return tree, manifest
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host now, write-to-disk in the background."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending = None
+        self._lock = threading.Lock()
+
+    def save_async(self, step: int, tree, *, extra: Optional[Dict] = None):
+        host = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+        self.wait()
+        self._pending = self._pool.submit(self._write, step, host, extra)
+
+    def _write(self, step, host_tree, extra):
+        save(self.ckpt_dir, step, host_tree, extra=extra)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()
+                self._pending = None

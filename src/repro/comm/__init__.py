@@ -1,0 +1,6 @@
+"""Comm layer: message protocols (compressed gradients/dispatch) + the
+SPAC DSE over comm configurations (dse_comm, built on repro.core.dse)."""
+from .dse_comm import CommDSEProblem, CommSpec, autotune_moe, route_trace
+from .protocols import compressed_mean, wrap_grad_fn_with_pod_protocol
+__all__ = ["CommDSEProblem", "CommSpec", "autotune_moe", "compressed_mean",
+           "route_trace", "wrap_grad_fn_with_pod_protocol"]

@@ -1,0 +1,51 @@
+"""SPAC core: protocol DSL, semantic binding, architecture space, DSE engine.
+
+This package is the paper's primary contribution (SS III-A, SS IV-B) and is
+shared by both halves of the repo: the faithful FPGA-switch reproduction
+(``repro.switch`` / ``repro.sim``) and the TPU training-framework adaptation
+(``repro.comm`` / ``repro.launch``).
+"""
+
+from .archspec import (
+    AUTO,
+    ArchRequest,
+    BUS_WIDTHS,
+    CustomKernelSpec,
+    ForwardTableKind,
+    SchedulerKind,
+    SwitchArch,
+    VOQKind,
+    enumerate_candidates,
+)
+from .binding import BoundProtocol, SemanticBinding, bind
+from .dse import (
+    DSEProblem,
+    DSEResult,
+    ResourceBudget,
+    SLA,
+    SurrogateResult,
+    VerifyResult,
+    depth_for_drop_rate,
+    run_dse,
+)
+from .dsl import (
+    ETHERNET_HEADER_BYTES,
+    Field,
+    ParserPlan,
+    Protocol,
+    compressed_protocol,
+    ethernet_ipv4_udp,
+)
+from .features import TraceFeatures, analyze
+from .pareto import hypervolume_2d, is_dominated, pareto_front
+
+__all__ = [
+    "AUTO", "ArchRequest", "BUS_WIDTHS", "BoundProtocol", "CustomKernelSpec",
+    "DSEProblem", "DSEResult", "ETHERNET_HEADER_BYTES", "Field",
+    "ForwardTableKind", "ParserPlan", "Protocol", "ResourceBudget", "SLA",
+    "SchedulerKind", "SemanticBinding", "SurrogateResult", "SwitchArch",
+    "TraceFeatures", "VOQKind", "VerifyResult", "analyze", "bind",
+    "compressed_protocol", "depth_for_drop_rate", "enumerate_candidates",
+    "ethernet_ipv4_udp", "hypervolume_2d", "is_dominated", "pareto_front",
+    "run_dse",
+]

@@ -1,0 +1,236 @@
+"""Progressive Constraint Satisfaction DSE — Algorithm 1 of the paper.
+
+The engine is deliberately generic: a ``DSEProblem`` supplies templates,
+timing, surrogate evaluation, buffer sizing and verification, and the engine
+runs the paper's four stages:
+
+  Stage 1  Static pruning        T_proc > (1+δ)·T_arrival ⇒ drop
+  Stage 2  Coarse profiling      surrogate w/ infinite buffers; prune on p99 SLA
+  Stage 3  Statistical sizing    d_opt from queue-occupancy histogram @ ε,
+                                 aligned to physical memory; prune on resources
+  Stage 4  Verification          full simulation of the sized candidate
+
+Two concrete problems implement this interface:
+  * ``repro.sim.switch_problem.SwitchDSEProblem``  — the paper's FPGA switch
+  * ``repro.comm.dse_comm.CommDSEProblem``         — the TPU comm/dispatch layer
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .pareto import pareto_front
+
+__all__ = [
+    "SLA",
+    "ResourceBudget",
+    "SurrogateResult",
+    "VerifyResult",
+    "DSEProblem",
+    "DSEResult",
+    "StageLog",
+    "run_dse",
+    "depth_for_drop_rate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLA:
+    p99_latency_ns: float = math.inf
+    drop_rate: float = 1e-3          # ε: target tail drop rate for sizing
+    min_throughput_gbps: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceBudget:
+    """Generic resource vector; keys are resource names (LUT/BRAM/… or bytes)."""
+
+    limits: Dict[str, float]
+
+    def admits(self, usage: Dict[str, float]) -> bool:
+        return all(usage.get(k, 0.0) <= v for k, v in self.limits.items())
+
+
+@dataclasses.dataclass
+class SurrogateResult:
+    """Stage-2 output: infinite-buffer queue occupancy histogram + latencies."""
+
+    q_occupancy: np.ndarray       # samples (or histogram support) of max queue depth
+    latency_ns: np.ndarray        # per-packet latency samples
+    throughput_gbps: float = 0.0
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def p(self, q: float) -> float:
+        return float(np.percentile(self.latency_ns, q)) if self.latency_ns.size else math.inf
+
+
+@dataclasses.dataclass
+class VerifyResult:
+    p99_latency_ns: float
+    mean_latency_ns: float
+    drop_rate: float
+    throughput_gbps: float
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def meets(self, sla: SLA) -> bool:
+        return (
+            self.p99_latency_ns <= sla.p99_latency_ns
+            and self.drop_rate <= sla.drop_rate * 1.5  # discretised sizing slack
+            and self.throughput_gbps >= sla.min_throughput_gbps
+        )
+
+
+class DSEProblem:
+    """Interface Algorithm 1 runs against (override all methods)."""
+
+    def candidates(self) -> List[Any]:
+        raise NotImplementedError
+
+    def static_timing(self, cand) -> Tuple[float, float]:
+        """Return (T_proc, T_arrival) in seconds for stage-1 pruning."""
+        raise NotImplementedError
+
+    def surrogate(self, cand) -> SurrogateResult:
+        """Infinite-buffer statistical simulation (stage 2)."""
+        raise NotImplementedError
+
+    def size_buffers(self, cand, q_occupancy: np.ndarray, eps: float):
+        """Map occupancy histogram to a sized candidate (stage 3)."""
+        raise NotImplementedError
+
+    def resources(self, cand) -> Dict[str, float]:
+        raise NotImplementedError
+
+    def verify(self, cand) -> VerifyResult:
+        """High-fidelity simulation of the sized candidate (stage 4)."""
+        raise NotImplementedError
+
+    def objectives(self, cand, verify: VerifyResult) -> Tuple[float, float]:
+        """(latency, primary-resource) pair for ranking/Pareto (minimise both)."""
+        res = self.resources(cand)
+        primary = res.get("bram", res.get("bytes_per_device", sum(res.values())))
+        return (verify.p99_latency_ns, float(primary))
+
+    def diversity_key(self, cand):
+        """Architecture-family key: stage 3 verifies the best candidate of
+        every family in addition to the global top-K, so a surrogate ranking
+        bias cannot starve a whole scheduler/buffer family of verification."""
+        return None
+
+
+@dataclasses.dataclass
+class StageLog:
+    stage: str
+    considered: int
+    survived: int
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class DSEResult:
+    best: Optional[Any]
+    best_verify: Optional[VerifyResult]
+    pareto: List[Tuple[Any, VerifyResult]]
+    evaluated: List[Tuple[Any, VerifyResult, Dict[str, float], bool]]
+    logs: List[StageLog]
+
+    def summary(self) -> str:
+        lines = [f"DSE: {len(self.evaluated)} verified, {len(self.pareto)} on Pareto front"]
+        for lg in self.logs:
+            lines.append(f"  [{lg.stage}] {lg.considered} -> {lg.survived}")
+        if self.best is not None and self.best_verify is not None:
+            lines.append(
+                f"  best: {getattr(self.best, 'short', lambda: repr(self.best))()} "
+                f"p99={self.best_verify.p99_latency_ns:.1f}ns "
+                f"drop={self.best_verify.drop_rate:.2e} "
+                f"thru={self.best_verify.throughput_gbps:.1f}Gbps"
+            )
+        return "\n".join(lines)
+
+
+def depth_for_drop_rate(q_occupancy: np.ndarray, eps: float) -> int:
+    """Smallest depth d with P(occupancy > d) <= ε (stage 3 core)."""
+    q = np.asarray(q_occupancy, dtype=np.float64)
+    if q.size == 0:
+        return 1
+    d = float(np.quantile(q, 1.0 - eps, method="higher"))
+    return max(1, int(math.ceil(d)))
+
+
+def run_dse(
+    problem: DSEProblem,
+    sla: SLA,
+    budget: ResourceBudget,
+    *,
+    delta: float = 0.2,
+    top_k: int = 8,
+    verbose: bool = False,
+) -> DSEResult:
+    """Algorithm 1: Progressive Constraint Satisfaction."""
+    logs: List[StageLog] = []
+
+    # ---------------------------------------------------- Stage 1: static pruning
+    cands = list(problem.candidates())
+    active = []
+    for a in cands:
+        t_proc, t_arrival = problem.static_timing(a)
+        if t_proc <= (1.0 + delta) * t_arrival:
+            active.append(a)
+    logs.append(StageLog("stage1-static", len(cands), len(active)))
+    if verbose:
+        print(logs[-1])
+
+    # ------------------------------------------ Stage 2: coarse-grained profiling
+    valid: List[Tuple[Any, SurrogateResult]] = []
+    for a in active:
+        sr = problem.surrogate(a)
+        if sr.p(99) <= sla.p99_latency_ns and sr.throughput_gbps >= sla.min_throughput_gbps:
+            valid.append((a, sr))
+    logs.append(StageLog("stage2-surrogate", len(active), len(valid)))
+    if verbose:
+        print(logs[-1])
+
+    # ------------------------------------------------ Stage 3: statistical sizing
+    # TopKLatency: explore the K best candidates by surrogate p99, plus the
+    # best of each architecture family (diversity-preserving)
+    valid.sort(key=lambda av: av[1].p(99))
+    explored = list(valid[: top_k if top_k > 0 else len(valid)])
+    seen_keys = {id(a) for a, _ in explored}
+    families = {}
+    for a, sr in valid:
+        k = problem.diversity_key(a)
+        if k is not None and k not in families:
+            families[k] = (a, sr)
+    for a, sr in families.values():
+        if id(a) not in seen_keys:
+            explored.append((a, sr))
+    evaluated: List[Tuple[Any, VerifyResult, Dict[str, float], bool]] = []
+    best: Optional[Any] = None
+    best_v: Optional[VerifyResult] = None
+    sized_ok = 0
+    for a, sr in explored:
+        sized = problem.size_buffers(a, sr.q_occupancy, sla.drop_rate)
+        if sized is None:
+            continue
+        res = problem.resources(sized)
+        if not budget.admits(res):
+            continue
+        sized_ok += 1
+        # -------------------------------------------------- Stage 4: verification
+        v = problem.verify(sized)
+        feasible = v.meets(sla)
+        evaluated.append((sized, v, res, feasible))
+        if feasible:
+            if best_v is None or problem.objectives(sized, v) < problem.objectives(best, best_v):
+                best, best_v = sized, v
+    logs.append(StageLog("stage3-sizing+verify", len(explored), sized_ok))
+    if verbose:
+        print(logs[-1])
+
+    feas = [(a, v) for a, v, _, ok in evaluated if ok] or [(a, v) for a, v, _, _ in evaluated]
+    front = pareto_front(feas, key=lambda av: problem.objectives(av[0], av[1])) if feas else []
+    return DSEResult(best=best, best_verify=best_v, pareto=front, evaluated=evaluated, logs=logs)

@@ -1,0 +1,257 @@
+"""SPAC protocol DSL — NetBlocks-compatible bit-level packet layout.
+
+The paper (§III-A) uses NetBlocks syntax to declare custom protocols with
+bit-level serialization.  A ``Protocol`` here is the single source of truth
+consumed by
+
+  * the switch parser generator (compile-time bit offsets, straddle detection,
+    ``src/repro/switch/parser.py`` and the Pallas kernel generator in
+    ``src/repro/kernels/parser``),
+  * the network simulator (header/payload serialization delay),
+  * the DSE engine (S_min, header overhead),
+  * and the TPU comm layer (message layouts for gradient buckets / MoE
+    dispatch payloads reuse the same Field/Protocol machinery).
+
+Layout rules mirror NetBlocks: fields are packed MSB-first, back to back, with
+no implicit alignment.  ``Protocol.compile(flit_bits)`` reproduces the paper's
+"template metaprogramming" stage: it recursively computes the exact bit offset
+of every field relative to flit boundaries and detects fields that straddle
+word boundaries (which need state retention in hardware).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Field",
+    "Protocol",
+    "FieldSlice",
+    "ParserPlan",
+    "ethernet_ipv4_udp",
+    "compressed_protocol",
+    "ETHERNET_HEADER_BYTES",
+]
+
+# A standard Ethernet+IPv4+UDP stack costs 42 B of header (the paper's §II-B
+# "at least 42B" figure): 14 (Eth) + 20 (IPv4) + 8 (UDP).
+ETHERNET_HEADER_BYTES = 42
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    """One bit-field of a protocol header.
+
+    ``bits`` is the exact width; ``semantic`` is the optional alias used by
+    semantic binding (§III-A), e.g. ``routing_key`` / ``src_key`` / ``qos`` /
+    ``length`` / ``seq_no`` / ``opcode``.
+    """
+
+    name: str
+    bits: int
+    semantic: Optional[str] = None
+    default: int = 0
+
+    def __post_init__(self):
+        if self.bits <= 0 or self.bits > 64:
+            raise ValueError(f"field {self.name!r}: bits must be in [1, 64], got {self.bits}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSlice:
+    """Where a (piece of a) field lives relative to flit boundaries.
+
+    ``word`` indexes the flit, ``hi``/``lo`` are bit positions inside the flit
+    (MSB-first, ``hi`` inclusive, ``lo`` inclusive, hi >= lo).  A field that
+    straddles a flit boundary compiles to >1 slice — the hardware then needs
+    minimal state retention, exactly the paper's straddle handling.
+    """
+
+    field: str
+    word: int
+    hi: int
+    lo: int
+    dst_shift: int  # how far left (in bits) this piece sits inside the value
+
+
+@dataclasses.dataclass(frozen=True)
+class ParserPlan:
+    """Compile-time parsing plan for a given flit width (§III-B.1)."""
+
+    flit_bits: int
+    header_bits: int
+    slices: Tuple[FieldSlice, ...]
+    straddling_fields: Tuple[str, ...]
+
+    @property
+    def header_flits(self) -> int:
+        return -(-self.header_bits // self.flit_bits)
+
+    def slices_for(self, name: str) -> List[FieldSlice]:
+        return [s for s in self.slices if s.field == name]
+
+
+class Protocol:
+    """An ordered sequence of bit-fields followed by a variable payload."""
+
+    def __init__(self, name: str, fields: Sequence[Field]):
+        names = [f.name for f in fields]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate field names in protocol {name!r}")
+        self.name = name
+        self.fields: Tuple[Field, ...] = tuple(fields)
+        self._by_name: Dict[str, Field] = {f.name: f for f in fields}
+        offs: Dict[str, int] = {}
+        off = 0
+        for f in fields:
+            offs[f.name] = off
+            off += f.bits
+        self._offsets = offs
+        self.header_bits = off
+
+    # ------------------------------------------------------------------ meta
+    @property
+    def header_bytes(self) -> int:
+        return -(-self.header_bits // 8)
+
+    def field(self, name: str) -> Field:
+        return self._by_name[name]
+
+    def offset_of(self, name: str) -> int:
+        return self._offsets[name]
+
+    def fields_by_semantic(self, semantic: str) -> List[Field]:
+        return [f for f in self.fields if f.semantic == semantic]
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Protocol({self.name!r}, header={self.header_bits}b)"
+
+    # --------------------------------------------------------------- compile
+    def compile(self, flit_bits: int) -> ParserPlan:
+        """Lower the layout to flit-relative bit slices (paper §III-B.1)."""
+        if flit_bits <= 0 or flit_bits % 8:
+            raise ValueError("flit_bits must be a positive multiple of 8")
+        slices: List[FieldSlice] = []
+        straddlers: List[str] = []
+        for f in self.fields:
+            start = self._offsets[f.name]
+            end = start + f.bits  # exclusive
+            w0, w1 = start // flit_bits, (end - 1) // flit_bits
+            if w0 != w1:
+                straddlers.append(f.name)
+            remaining = f.bits
+            pos = start
+            while remaining > 0:
+                w = pos // flit_bits
+                in_word = pos - w * flit_bits
+                take = min(remaining, flit_bits - in_word)
+                # MSB-first: bit 0 of the stream is the MSB of flit word 0.
+                hi = flit_bits - 1 - in_word
+                lo = hi - take + 1
+                slices.append(
+                    FieldSlice(field=f.name, word=w, hi=hi, lo=lo, dst_shift=remaining - take)
+                )
+                pos += take
+                remaining -= take
+        return ParserPlan(
+            flit_bits=flit_bits,
+            header_bits=self.header_bits,
+            slices=tuple(slices),
+            straddling_fields=tuple(straddlers),
+        )
+
+    # ------------------------------------------------- reference (de)serialize
+    def pack(self, values: Dict[str, int], payload: bytes = b"") -> bytes:
+        """Bit-exact serializer (numpy reference; the oracle for the parser)."""
+        total_bits = self.header_bits
+        nbytes = -(-total_bits // 8)
+        buf = np.zeros(nbytes, dtype=np.uint8)
+        for f in self.fields:
+            v = int(values.get(f.name, f.default))
+            if v < 0 or v >= (1 << f.bits):
+                raise ValueError(f"value {v} out of range for field {f.name} ({f.bits}b)")
+            start = self._offsets[f.name]
+            for b in range(f.bits):
+                bit = (v >> (f.bits - 1 - b)) & 1
+                pos = start + b
+                if bit:
+                    buf[pos // 8] |= 1 << (7 - pos % 8)
+        return bytes(buf) + payload
+
+    def unpack(self, data: bytes) -> Dict[str, int]:
+        """Bit-exact deserializer."""
+        arr = np.frombuffer(data, dtype=np.uint8)
+        out: Dict[str, int] = {}
+        for f in self.fields:
+            start = self._offsets[f.name]
+            v = 0
+            for b in range(f.bits):
+                pos = start + b
+                bit = (arr[pos // 8] >> (7 - pos % 8)) & 1
+                v = (v << 1) | int(bit)
+            out[f.name] = v
+        return out
+
+    def wire_bytes(self, payload_bytes: int) -> int:
+        """Total on-wire size for a packet with the given payload."""
+        return self.header_bytes + int(payload_bytes)
+
+
+# --------------------------------------------------------------------------
+# Stock protocols
+# --------------------------------------------------------------------------
+
+def ethernet_ipv4_udp() -> Protocol:
+    """The general-purpose 42 B header stack the paper compresses away."""
+    return Protocol(
+        "ethernet_ipv4_udp",
+        [
+            Field("eth_dst", 48, semantic="routing_key"),
+            Field("eth_src", 48, semantic="src_key"),
+            Field("eth_type", 16),
+            Field("ip_ver_ihl", 8),
+            Field("ip_tos", 8, semantic="qos"),
+            Field("ip_len", 16, semantic="length"),
+            Field("ip_id", 16),
+            Field("ip_flags_frag", 16),
+            Field("ip_ttl", 8),
+            Field("ip_proto", 8),
+            Field("ip_csum", 16),
+            Field("ip_src", 32),
+            Field("ip_dst", 32),
+            Field("udp_src", 16),
+            Field("udp_dst", 16),
+            Field("udp_len", 16),
+            Field("udp_csum", 16),
+        ],
+    )
+
+
+def compressed_protocol(
+    name: str = "spac_compressed",
+    addr_bits: int = 4,
+    qos_bits: int = 2,
+    length_bits: int = 6,
+    seq_bits: int = 0,
+    extra_fields: Sequence[Field] = (),
+) -> Protocol:
+    """SPAC/NetBlocks-style shrunk protocol (e.g. the 2 B underwater header).
+
+    Default = 4b dst + 4b src + 2b qos + 6b length = 16 bits = 2 bytes,
+    matching Table II's ``Avg Header = 2`` rows.
+    """
+    fields: List[Field] = [
+        Field("dst", addr_bits, semantic="routing_key"),
+        Field("src", addr_bits, semantic="src_key"),
+    ]
+    if qos_bits:
+        fields.append(Field("qos", qos_bits, semantic="qos"))
+    if length_bits:
+        fields.append(Field("len", length_bits, semantic="length"))
+    if seq_bits:
+        fields.append(Field("seq", seq_bits, semantic="seq_no"))
+    fields.extend(extra_fields)
+    return Protocol(name, fields)

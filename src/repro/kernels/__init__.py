@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  parser/          - generated line-rate header parser (paper SS III-B.1)
+  quant_pack/      - payload quantise/pack (protocol compression analogue)
+  flash_attention/ - blockwise attention w/ online softmax (prefill path)
+  ssd/             - Mamba-2 SSD chunked scan (SSM/hybrid archs)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + XLA fallback used in dry-run graphs), ref.py (pure-jnp oracle).
+Validated on CPU via interpret=True; TPU is the deployment target.
+"""

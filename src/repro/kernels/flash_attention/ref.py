@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: exact softmax attention in f32."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q [BH, S, D], k/v [BH, T, D] -> [BH, S, D]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (d ** 0.5)
+    if causal:
+        sq, tk = s.shape[-2:]
+        mask = jnp.tril(jnp.ones((sq, tk), bool), k=tk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Oracle: the repo's lax-based iSLIP (repro.switch.scheduler), vmapped."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.archspec import (ForwardTableKind, SchedulerKind, SwitchArch,
+                                 VOQKind)
+from repro.switch.scheduler import SchedState, schedule
+
+
+def islip_ref(req: jnp.ndarray, gptr: jnp.ndarray, aptr: jnp.ndarray,
+              *, iters: int = 2):
+    """req [B, N, N] int -> (match [B,N,N] int32, gptr', aptr')."""
+    n = req.shape[-1]
+    arch = SwitchArch(n_ports=n, bus_bits=256, fwd=ForwardTableKind.FULL_LOOKUP,
+                      voq=VOQKind.NXN, sched=SchedulerKind.ISLIP,
+                      voq_depth=4, islip_iters=iters, addr_bits=4)
+
+    def one(r, g, a):
+        st = SchedState(grant_ptr=g.astype(jnp.int32), accept_ptr=a.astype(jnp.int32),
+                        held=jnp.full((n,), -1, jnp.int32))
+        busy = jnp.zeros((n,), bool)
+        m, st2 = schedule(arch, st, r.astype(jnp.int32), busy, busy)
+        return m.astype(jnp.int32), st2.grant_ptr, st2.accept_ptr
+
+    return jax.vmap(one)(req, gptr, aptr)

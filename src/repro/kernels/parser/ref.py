@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the generated parser kernel (same contract)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core.dsl import Protocol
+from .kernel import bake_slices
+
+
+def parse_ref(protocol: Protocol, field_names: Sequence[str], words: jnp.ndarray) -> jnp.ndarray:
+    baked = bake_slices(protocol, field_names)
+    cols = []
+    for pieces in baked:
+        v = jnp.zeros(words.shape[:1], dtype=jnp.uint32)
+        for word, lo, take, dst_shift in pieces:
+            piece = (words[:, word].astype(jnp.uint32) >> jnp.uint32(lo)) & jnp.uint32((1 << take) - 1)
+            v = v | (piece << jnp.uint32(dst_shift))
+        cols.append(v)
+    return jnp.stack(cols, axis=1)

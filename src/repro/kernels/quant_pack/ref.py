@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the quantise/pack kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+GROUP = 128
+
+
+def quantize_ref(x: jnp.ndarray):
+    r, c = x.shape
+    g = x.astype(jnp.float32).reshape(r, c // GROUP, GROUP)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(r, c), scale[..., 0]
+
+
+def dequantize_ref(q: jnp.ndarray, s: jnp.ndarray, out_dtype=jnp.float32):
+    r, c = q.shape
+    g = q.astype(jnp.float32).reshape(r, c // GROUP, GROUP)
+    return (g * s[..., None]).reshape(r, c).astype(out_dtype)

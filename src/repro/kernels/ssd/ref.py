@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for SSD: the sequential state-space recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c) -> jnp.ndarray:
+    """Sequential scan.  x [BH,S,P], dt [BH,S], a [BH], b/c [BH,S,N] -> [BH,S,P]."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def per_head(xh, dth, ah, bh_, ch):
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt * ah)
+            state = state * decay + dtt * jnp.outer(xt, bt)     # [P, N]
+            y = state @ ct                                       # [P]
+            return state, y
+
+        init = jnp.zeros((p, n), jnp.float32)
+        _, ys = jax.lax.scan(step, init, (xh.astype(jnp.float32), dth.astype(jnp.float32),
+                                          bh_.astype(jnp.float32), ch.astype(jnp.float32)))
+        return ys
+
+    ys = jax.vmap(per_head)(x, dt, a, b, c)
+    return ys.astype(x.dtype)

@@ -1,0 +1,7 @@
+"""Launch layer: production meshes, dry-run, train/serve drivers.
+
+NOTE: do NOT import .dryrun from here — it sets XLA device-count flags at
+import time and must only be imported as the top-level entry point.
+"""
+from .mesh import make_production_mesh, make_smoke_mesh, plan_for_mesh
+__all__ = ["make_production_mesh", "make_smoke_mesh", "plan_for_mesh"]

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell and extract memory / cost / collective statistics.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialisation, and the production meshes need 512 host placeholder devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_arch_names, get_config, shapes_for
+from repro.models.moe import MoEOptions
+from repro.train.optimizer import adafactor, adamw
+from repro.train.train_step import TrainSpec, make_train_step
+from repro.models import transformer as T
+from .mesh import make_production_mesh, plan_for_mesh
+from .roofline import (collective_bytes, derive_terms, model_flops,
+                       structural_memory_bytes)
+from .specs import input_specs, sharding_tree
+
+
+def choose_optimizer(cfg, name: Optional[str] = None):
+    """fp32 Adam fits every arch except the 1T MoE → factored states there."""
+    if name is None:
+        name = "adafactor" if cfg.param_count() > 3e11 else "adamw"
+    if name == "adafactor":
+        return adafactor(lr=1e-3), "adafactor"
+    if name == "adamw_bf16":
+        import jax.numpy as _jnp
+        return adamw(lr=3e-4, state_dtype=_jnp.bfloat16), "adamw_bf16"
+    return adamw(lr=3e-4), "adamw"
+
+
+def choose_microbatches(cfg, shape, mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    tokens_per_device = shape.global_batch * shape.seq_len // dp
+    mb = max(1, tokens_per_device // 16384)
+    while shape.global_batch % (mb * dp) and mb > 1:   # µb batch must shard
+        mb -= 1
+    return mb
+
+
+def _lower_one(cfg, shape, plan, mesh, opt, moe_opts, microbatches,
+               train_spec_overrides=None):
+    """Build + lower + compile the jitted step for one concrete config."""
+    spec = input_specs(cfg, shape, plan, mesh, opt=opt)
+    if shape.kind == "train":
+        tspec = TrainSpec(microbatches=microbatches, moe_opts=moe_opts,
+                          **(train_spec_overrides or {}))
+        step_fn = make_train_step(cfg, plan, mesh, opt, tspec)
+        p_sh = sharding_tree(mesh, spec["params_spec"], spec["params"])
+        o_sh = sharding_tree(mesh, spec["opt_spec"], spec["opt_state"])
+        in_sh = (p_sh, o_sh, sharding_tree(mesh, spec["batch_spec"]), None)
+        out_sh = (p_sh, o_sh, None)
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1))
+        return jitted.lower(spec["params"], spec["opt_state"], spec["batch"],
+                            jax.ShapeDtypeStruct((), jnp.int32))
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return T.prefill(params, cfg, plan, mesh, batch, moe_opts=moe_opts)
+        in_sh = (sharding_tree(mesh, spec["params_spec"], spec["params"]),
+                 sharding_tree(mesh, spec["batch_spec"]))
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        return jitted.lower(spec["params"], spec["batch"])
+
+    def fn(params, state, tok):
+        return T.decode_step(params, cfg, plan, mesh, state, tok,
+                             moe_opts=moe_opts)
+    in_sh = (sharding_tree(mesh, spec["params_spec"], spec["params"]),
+             sharding_tree(mesh, spec["state_spec"]),
+             sharding_tree(mesh, spec["tok_spec"]))
+    out_sh = (sharding_tree(mesh, spec["state_spec"]), None)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+    return jitted.lower(spec["params"], spec["state"], spec["tok"])
+
+
+def _extrapolated_cost(cfg, shape, plan, mesh, opt, moe_opts,
+                       train_spec_overrides=None):
+    """cost_analysis counts scan bodies once; lower L=1 and L=2 variants and
+    extrapolate linearly.  The variants unroll every loop (python-loop layers,
+    fully-unrolled blockwise attention, microbatch=1) so the body is counted
+    exactly L times; token counts match the real step, so per-layer FLOPs
+    equal the real per-layer totals."""
+    pts = []
+    for lyr in (1, 2):
+        cfg_l = dataclasses.replace(cfg, n_layers=lyr, scan_layers=False,
+                                    attn_unroll=True)
+        lowered = _lower_one(cfg_l, shape, plan, mesh, opt, moe_opts, 1,
+                             train_spec_overrides)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        pts.append((float(cost.get("flops", 0.0)),
+                    float(cost.get("bytes accessed", 0.0)), coll))
+    l_full = cfg.n_layers
+    f = pts[0][0] + (pts[1][0] - pts[0][0]) * (l_full - 1)
+    b = pts[0][1] + (pts[1][1] - pts[0][1]) * (l_full - 1)
+    coll = {}
+    for kind in pts[0][2]:
+        c1, c2 = pts[0][2][kind], pts[1][2][kind]
+        coll[kind] = {
+            "count": int(c1["count"] + (c2["count"] - c1["count"]) * (l_full - 1)),
+            "bytes": float(c1["bytes"] + (c2["bytes"] - c1["bytes"]) * (l_full - 1)),
+        }
+    return {"flops": f, "bytes accessed": b}, coll
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    moe_opts: Optional[MoEOptions] = None,
+    train_spec_overrides: Optional[Dict] = None,
+    plan_overrides: Optional[Dict] = None,
+    optimizer: Optional[str] = None,
+    cfg_overrides: Optional[Dict] = None,
+    verbose: bool = True,
+    extrapolate: bool = True,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; return the §Dry-run/§Roofline record."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_for_mesh(mesh)
+    if plan_overrides:
+        plan = dataclasses.replace(plan, **plan_overrides)
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    opt, opt_name = choose_optimizer(cfg, optimizer)
+    moe_opts = moe_opts or MoEOptions.from_config(cfg)
+    mb = 1
+    extra = {}
+    if shape.kind == "train":
+        mb = (train_spec_overrides or {}).get("microbatches") or \
+            choose_microbatches(cfg, shape, mesh)
+        if train_spec_overrides:
+            train_spec_overrides = {k: v for k, v in train_spec_overrides.items()
+                                    if k != "microbatches"}
+        extra = {"optimizer": opt_name, "microbatches": mb}
+    t0 = time.time()
+    lowered = _lower_one(cfg, shape, plan, mesh, opt, moe_opts, mb,
+                         train_spec_overrides)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    if extrapolate:
+        cost, coll = _extrapolated_cost(cfg, shape, plan, mesh, opt, moe_opts,
+                                        train_spec_overrides)
+    else:
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+    mem_struct = structural_memory_bytes(cfg, shape, dict(mesh.shape), opt_name)
+    terms = derive_terms(cost, coll, model_flops_global=model_flops(cfg, shape),
+                         n_chips=n_chips, memory_bytes=mem_struct)
+
+    mem_rec = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    live = (mem_rec["argument_bytes"] or 0) + (mem_rec["temp_bytes"] or 0) \
+        + (mem_rec["output_bytes"] or 0) - (mem_rec["alias_bytes"] or 0)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_rec,
+        "bytes_per_device_live": live,
+        "fits_16gb": bool(live <= 16e9),
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost},
+        "memory_bytes_structural": mem_struct,
+        "memory_bytes_unfused_upper": cost.get("bytes accessed"),
+        "collectives": coll,
+        "roofline": terms.as_dict(),
+        **extra,
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"live {live/1e9:.2f} GB/dev (fits16GB={rec['fits_16gb']}) | "
+              f"compute {terms.compute_s*1e3:.2f}ms mem {terms.memory_s*1e3:.2f}ms "
+              f"coll {terms.collective_s*1e3:.2f}ms -> {terms.dominant}-bound | "
+              f"useful-flops {terms.useful_flops_ratio:.2f} "
+              f"roofline {terms.roofline_fraction:.2%}")
+        print("  memory_analysis:", {k: v for k, v in mem_rec.items() if v})
+        print("  cost_analysis:", rec["cost"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = all_arch_names() if (args.all or args.arch is None) else [args.arch]
+    for a in archs:
+        cfg = get_config(a)
+        shapes = [s.name for s in shapes_for(cfg)] if args.shape is None else [args.shape]
+        for sh in shapes:
+            meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((a, sh, mp))
+
+    failures = 0
+    for a, sh, mp in cells:
+        tag = f"{a}_{sh}_{'multi' if mp else 'single'}".replace(".", "_")
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"skip {tag} (exists)")
+            continue
+        try:
+            rec = lower_cell(a, sh, multi_pod=mp)
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+            failures += 1
+            print(f"FAIL {tag}: {e}")
+            traceback.print_exc()
+            with open(out_path + ".fail", "w") as f:
+                f.write(traceback.format_exc())
+    print(f"done: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

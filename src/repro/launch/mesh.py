@@ -1,0 +1,27 @@
+"""Production meshes.  A function, not a constant — importing this module
+never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "plan_for_mesh", "N_DEVICES"]
+
+N_DEVICES = {"single": 256, "multi": 512}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def plan_for_mesh(mesh):
+    from repro.models.config import MULTI_POD_PLAN, SINGLE_POD_PLAN
+    return MULTI_POD_PLAN if "pod" in mesh.axis_names else SINGLE_POD_PLAN

@@ -1,0 +1,58 @@
+"""Production serving driver: continuous batching over the decode step.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+        --requests 8 --slots 4
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.models import transformer as T
+from repro.serve import Request, ServeEngine
+from .mesh import make_production_mesh, make_smoke_mesh, plan_for_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--s-max", type=int, default=256)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = get_smoke(args.arch)
+        mesh = make_smoke_mesh()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    plan = plan_for_mesh(mesh)
+    params, _ = T.init_params(jax.random.PRNGKey(0), cfg, plan)
+    eng = ServeEngine(cfg, plan, mesh, params, slots=args.slots, s_max=args.s_max)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, rng.integers(4, 12))
+                    .astype(np.int32), max_new=args.max_new)
+            for i in range(args.requests)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    ticks = 0
+    while (eng._queue or eng._active) and ticks < 100_000:
+        eng.step()
+        ticks += 1
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in reqs)
+    print(f"served {sum(r.done for r in reqs)}/{len(reqs)} requests, "
+          f"{toks} tokens, {ticks} ticks, {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape, plan, mesh)`` returns abstract (no-allocation)
+descriptions of every input of the lowered step: the training batch for
+``train_*``, the request batch for ``prefill``, and (token, KV-cache/SSM
+state) for ``decode``.  Modality frontends are stubs per the assignment:
+``[vlm]``/``[audio]`` cells get precomputed patch/frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShardingPlan
+
+__all__ = ["input_specs", "batch_specs", "abstract_params", "sharding_tree", "div_axes"]
+
+
+def _sanitize_spec(shape, spec: P, mesh) -> P:
+    """Drop axis entries whose mesh extent does not divide the dim size."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        out.append(ax if (dim % total == 0 and dim >= total) else None)
+    return P(*out)
+
+
+def sharding_tree(mesh, specs, structs=None):
+    """Specs -> NamedShardings; with `structs`, indivisible dims fall back to
+    replication (e.g. vocab 50280 on a 16-way tensor axis)."""
+    if structs is None:
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda st, s: NamedSharding(mesh, _sanitize_spec(st.shape, s, mesh)),
+        structs, specs, is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+def div_axes(size: int, axes: Tuple[str, ...], mesh) -> Any:
+    """Use the dp axes for a dim only if the size divides; else replicate."""
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if size % total == 0 and size >= total:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, plan: ShardingPlan, mesh):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for one data batch."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = div_axes(b, tuple(plan.dp_axes), mesh)
+    structs: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        structs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = P(dp, None)
+    if cfg.frontend == "tokens":
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["tokens"] = P(dp, None)
+    else:
+        structs["embeddings"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        specs["embeddings"] = P(dp, None, None)
+    if cfg.mrope:
+        structs["positions3"] = jax.ShapeDtypeStruct((b, 3, s), jnp.int32)
+        specs["positions3"] = P(dp, None, None)
+    return structs, specs
+
+
+def abstract_params(cfg: ModelConfig, plan: ShardingPlan):
+    """(param ShapeDtypeStructs, PartitionSpec tree) without allocation."""
+    captured = {}
+
+    def f(k):
+        params, specs = T.init_params(k, cfg, plan)
+        captured["specs"] = specs      # concrete P objects, captured at trace time
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def decode_state_specs(cfg: ModelConfig, plan: ShardingPlan, mesh, shape: ShapeSpec):
+    """Abstract decode state + shardings (divisibility-aware)."""
+    state_struct, specs = T.decode_state_structs(cfg, plan, shape.global_batch,
+                                                 shape.seq_len)
+    # fix up divisibility: any dim the default spec shards must divide
+    fixed = {}
+    for k, spec in specs.items():
+        arr = state_struct[k]
+        new = []
+        for dim, ax in enumerate(tuple(spec) + (None,) * (arr.ndim - len(tuple(spec)))):
+            if ax is None:
+                new.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            new.append(ax if arr.shape[dim] % total == 0 and arr.shape[dim] >= total else None)
+        fixed[k] = P(*new)
+    return state_struct, fixed
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, plan: ShardingPlan, mesh,
+                *, opt=None) -> Dict[str, Any]:
+    """Everything the dry-run needs to lower one cell."""
+    params_s, params_spec = abstract_params(cfg, plan)
+    out: Dict[str, Any] = {
+        "params": params_s,
+        "params_spec": params_spec,
+    }
+    if shape.kind == "train":
+        batch_s, batch_spec = batch_specs(cfg, shape, plan, mesh)
+        out.update(batch=batch_s, batch_spec=batch_spec)
+        if opt is not None:
+            opt_s = jax.eval_shape(opt.init, params_s)
+            out["opt_state"] = opt_s
+            out["opt_spec"] = opt.state_specs(params_spec)
+    elif shape.kind == "prefill":
+        batch_s, batch_spec = batch_specs(cfg, shape, plan, mesh)
+        out.update(batch=batch_s, batch_spec=batch_spec)
+    else:  # decode / long_decode
+        b = shape.global_batch
+        dp = div_axes(b, tuple(plan.dp_axes), mesh)
+        if cfg.frontend == "tokens":
+            out["tok"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            out["tok_spec"] = P(dp, None)
+        else:
+            out["tok"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+            out["tok_spec"] = P(dp, None, None)
+        state_s, state_spec = decode_state_specs(cfg, plan, mesh, shape)
+        out["state"] = state_s
+        out["state_spec"] = state_spec
+    return out

@@ -1,0 +1,11 @@
+"""Model zoo: config/plan datatypes, layers, attention, MoE fabric, SSD,
+transformer composition for all 10 assigned architectures."""
+from .config import (MULTI_POD_PLAN, SINGLE_POD_PLAN, ModelConfig, ShardingPlan)
+from .moe import MoEOptions
+from .transformer import (ModelBundle, decode_state_structs, decode_step, forward,
+                          init_decode_state, init_params, loss_fn, param_specs,
+                          prefill)
+__all__ = ["MULTI_POD_PLAN", "ModelBundle", "ModelConfig", "MoEOptions",
+           "SINGLE_POD_PLAN", "ShardingPlan", "decode_step", "forward",
+           "init_decode_state", "init_params", "loss_fn", "param_specs", "prefill",
+           "decode_state_structs"]

@@ -1,0 +1,86 @@
+"""Shared layers: norms, gated MLP, embeddings — functional, pytree params.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+params pytree with ``jax.sharding.PartitionSpec`` leaves; the launcher builds
+``NamedSharding``s from them.  Stacked-layer params carry a leading ``L`` dim
+(scan-over-layers, MaxText-style) — spec leaves get ``None`` prepended by the
+transformer's stacker.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig, ShardingPlan
+
+__all__ = ["rms_norm", "init_embedding", "init_unembed", "init_mlp", "apply_mlp",
+           "init_norm", "dense_init"]
+
+
+def dense_init(key, shape, fan_in: Optional[int] = None, dtype=jnp.bfloat16):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig):
+    return jnp.ones((cfg.d_model,), jnp.float32), P(None)
+
+
+# ----------------------------------------------------------------- embeddings
+
+def _fsdp(plan: ShardingPlan):
+    if not plan.fsdp_weights:
+        return None
+    axes = tuple(plan.fsdp_axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def init_embedding(key, cfg: ModelConfig, plan: ShardingPlan):
+    p = dense_init(key, (cfg.vocab, cfg.d_model), fan_in=cfg.d_model, dtype=jnp.bfloat16)
+    if plan.embed_dmodel_sharded:
+        # vocab replicated, d sharded on tp: token gathers stay device-local
+        return p, P(None, plan.tp)
+    return p, P(plan.tp, _fsdp(plan))
+
+
+def init_unembed(key, cfg: ModelConfig, plan: ShardingPlan):
+    p = dense_init(key, (cfg.d_model, cfg.vocab), dtype=jnp.bfloat16)
+    return p, P(_fsdp(plan), plan.tp)
+
+
+# ------------------------------------------------------------------ gated MLP
+
+def init_mlp(key, cfg: ModelConfig, plan: ShardingPlan, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wi": dense_init(k1, (d, ff)),
+        "wg": dense_init(k2, (d, ff)),
+        "wo": dense_init(k3, (ff, d), fan_in=ff),
+    }
+    fs = _fsdp(plan)
+    specs = {
+        "wi": P(fs, plan.tp),
+        "wg": P(fs, plan.tp),
+        "wo": P(plan.tp, fs),
+    }
+    return params, specs
+
+
+def apply_mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])

@@ -1,0 +1,150 @@
+"""Mamba-2 (SSD) block — attention-free sequence mixing, TP over heads.
+
+Projections are stored unpacked (wz/wx/wb/wc/wdt) so tensor parallelism
+shards the head/inner dims cleanly; B and C are group-shared (G=1) and
+replicated.  The sequence mix runs through the chunked SSD op
+(`repro.kernels.ssd.ops.ssd_chunked`, same math as the Pallas kernel).
+Decode keeps a [B, H, P, N] state + a depthwise-conv tail instead of a KV
+cache — why SSM/hybrid archs own the 500k-context cells.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.ssd.ops import ssd_chunked, ssd_decode_step
+from .config import ModelConfig, ShardingPlan
+from .layers import dense_init
+
+__all__ = ["init_mamba", "apply_mamba", "init_mamba_state", "decode_mamba"]
+
+
+def _fs(plan):
+    if not plan.fsdp_weights:
+        return None
+    a = tuple(plan.fsdp_axes)
+    return a if len(a) > 1 else a[0]
+
+
+def init_mamba(key, cfg: ModelConfig, plan: ShardingPlan):
+    d, di, n, h = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    params = {
+        "wz": dense_init(ks[0], (d, di)),
+        "wx": dense_init(ks[1], (d, di)),
+        "wb": dense_init(ks[2], (d, n)),
+        "wc": dense_init(ks[3], (d, n)),
+        "wdt": dense_init(ks[4], (d, h), dtype=jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (di, cfg.ssm_conv), jnp.float32) * 0.1),
+        "a_log": jnp.zeros((h,), jnp.float32),            # A = -exp(a_log) = -1
+        "dskip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_g": jnp.ones((di,), jnp.float32),
+        "wo": dense_init(ks[6], (di, d), fan_in=di),
+    }
+    fs, tp = _fs(plan), plan.tp
+    specs = {
+        "wz": P(fs, tp), "wx": P(fs, tp), "wb": P(fs, None), "wc": P(fs, None),
+        "wdt": P(fs, tp), "conv_w": P(tp, None), "a_log": P(tp), "dskip": P(tp),
+        "dt_bias": P(tp), "norm_g": P(tp), "wo": P(tp, fs),
+    }
+    return params, specs
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq: x [B, S, C], w [C, K]."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):                    # K=4: unrolled shifts beat conv_general here
+        out = out + xp[:, i: i + x.shape[1]] * w[None, None, :, k - 1 - i][0]
+    return out
+
+
+def _heads(x, b, c, dt, cfg):
+    bsz, s, _ = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xh = x.reshape(bsz, s, h, p).transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    bh = jnp.broadcast_to(b[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    ch = jnp.broadcast_to(c[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    dth = dt.transpose(0, 2, 1).reshape(bsz * h, s)
+    return xh, bh, ch, dth
+
+
+def apply_mamba(params, cfg: ModelConfig, x: jnp.ndarray, *, chunk: int = 128,
+                return_state: bool = False):
+    bsz, s, d = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_headdim
+    z = jnp.einsum("bsd,di->bsi", x, params["wz"])
+    xi = jnp.einsum("bsd,di->bsi", x, params["wx"])
+    xi = jax.nn.silu(_causal_conv(xi, params["conv_w"]).astype(jnp.float32)).astype(x.dtype)
+    b = jnp.einsum("bsd,dn->bsn", x, params["wb"])
+    c = jnp.einsum("bsd,dn->bsn", x, params["wc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["wdt"]) + params["dt_bias"])
+    xh, bh, ch, dth = _heads(xi, b, c, dt, cfg)
+    a = -jnp.exp(jnp.broadcast_to(params["a_log"][None], (bsz, h)).reshape(-1))
+    ch_len = min(chunk, s) if s % min(chunk, s) == 0 else s
+    if return_state:
+        y, final_state = ssd_chunked(xh, dth, a, bh, ch, chunk=ch_len, return_state=True)
+    else:
+        y = ssd_chunked(xh, dth, a, bh, ch, chunk=ch_len)              # [BH, S, P]
+    y = y + xh * jnp.broadcast_to(
+        params["dskip"][None, :, None, None], (bsz, h, s, p)).reshape(bsz * h, s, p)
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3).reshape(bsz, s, h * p)
+    # gated RMSNorm
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * params["norm_g"]).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"])
+    if return_state:
+        conv_tail = xi[:, -(cfg.ssm_conv - 1):] if s >= cfg.ssm_conv - 1 else jnp.pad(
+            xi, ((0, 0), (cfg.ssm_conv - 1 - s, 0), (0, 0)))
+        return out, {"ssm": final_state, "conv": conv_tail}
+    return out
+
+
+# ------------------------------------------------------------------ decode
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    h, p, n, di = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_inner
+    return {
+        "ssm": jnp.zeros((batch * h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+    }
+
+
+def decode_mamba(params, cfg: ModelConfig, state, x: jnp.ndarray):
+    """One-token step.  x [B, 1, d] -> (state, y [B, 1, d])."""
+    bsz = x.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = jnp.einsum("bsd,di->bsi", x, params["wz"])[:, 0]
+    xi = jnp.einsum("bsd,di->bsi", x, params["wx"])[:, 0]            # [B, di]
+    window = jnp.concatenate([state["conv"], xi[:, None]], axis=1)   # [B, K, di]
+    w = params["conv_w"]                                             # [di, K]
+    xc = jnp.einsum("bki,ik->bi", window, w)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    new_conv = window[:, 1:]
+    b = jnp.einsum("bsd,dn->bsn", x, params["wb"])[:, 0]
+    c = jnp.einsum("bsd,dn->bsn", x, params["wc"])[:, 0]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["wdt"])[:, 0] + params["dt_bias"])
+    xh = xc.reshape(bsz, h, p).reshape(bsz * h, p).astype(jnp.float32)
+    bh = jnp.broadcast_to(b[:, None], (bsz, h, n)).reshape(bsz * h, n).astype(jnp.float32)
+    chh = jnp.broadcast_to(c[:, None], (bsz, h, n)).reshape(bsz * h, n).astype(jnp.float32)
+    dth = dt.reshape(bsz * h)
+    a = -jnp.exp(jnp.broadcast_to(params["a_log"][None], (bsz, h)).reshape(-1))
+    ssm, yh = ssd_decode_step(state["ssm"], xh, dth, a, bh, chh)
+    yh = yh + xh * jnp.broadcast_to(params["dskip"][None], (bsz, h)).reshape(-1)[:, None]
+    y = yh.reshape(bsz, h * p).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * params["norm_g"]).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["wo"])[:, None]
+    return {"ssm": ssm, "conv": new_conv}, out

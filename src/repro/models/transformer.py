@@ -1,0 +1,416 @@
+"""Model composition: blocks, scan-over-layers, train forward, decode step.
+
+One code path serves all 10 architectures; the block is assembled from the
+config's family:
+
+  dense / vlm / audio  : rmsnorm → GQA attn → rmsnorm → gated MLP
+  moe                  : rmsnorm → GQA attn → rmsnorm → switch-fabric MoE
+  ssm                  : rmsnorm → Mamba-2 SSD mix (attention-free)
+  hybrid (hymba)       : rmsnorm → ½·(attn ‖ SSD) parallel heads → rmsnorm → MLP
+
+Layers are scanned with stacked parameters (small HLO, fast 512-device
+compiles) and per-block activation checkpointing (cfg.remat).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_mod
+from . import mamba2 as ssm_mod
+from . import moe as moe_mod
+from .config import ModelConfig, ShardingPlan
+from .layers import (apply_mlp, init_embedding, init_mlp, init_norm, init_unembed,
+                     rms_norm)
+
+__all__ = ["init_params", "param_specs", "forward", "loss_fn", "init_decode_state",
+           "decode_state_structs", "prefill", "decode_step", "ModelBundle"]
+
+
+
+
+def _visible_axes(axes):
+    """Drop mesh axes that are Manual in the current tracing context (e.g.
+    inside the pod-manual shard_map of the compressed gradient protocol)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        manual = {n for n, t in zip(am.axis_names, am.axis_types)
+                  if t == jax.sharding.AxisType.Manual}
+    except Exception:
+        manual = set()
+    return tuple(a for a in axes if a not in manual)
+
+# --------------------------------------------------------------------- init
+
+def _init_block(key, cfg: ModelConfig, plan: ShardingPlan):
+    keys = jax.random.split(key, 6)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["ln1"], specs["ln1"] = init_norm(cfg)
+    if cfg.has_attention:
+        params["attn"], specs["attn"] = attn_mod.init_attention(keys[0], cfg, plan)
+    if cfg.has_ssm:
+        params["ssm"], specs["ssm"] = ssm_mod.init_mamba(keys[1], cfg, plan)
+    if cfg.family == "ssm":
+        return params, specs                     # mamba2: single-mix block, no MLP
+    params["ln2"], specs["ln2"] = init_norm(cfg)
+    if cfg.is_moe:
+        params["moe"], specs["moe"] = moe_mod.init_moe(keys[2], cfg, plan)
+    else:
+        params["mlp"], specs["mlp"] = init_mlp(keys[3], cfg, plan)
+    return params, specs
+
+
+def init_params(key, cfg: ModelConfig, plan: ShardingPlan):
+    """Returns (params, specs): layers stacked along a leading L dim."""
+    k_embed, k_un, k_layers = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "tokens":
+        params["embed"], specs["embed"] = init_embedding(k_embed, cfg, plan)
+    params["unembed"], specs["unembed"] = init_unembed(k_un, cfg, plan)
+    params["final_norm"], specs["final_norm"] = init_norm(cfg)
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    l0, block_specs = _init_block(layer_keys[0], cfg, plan)
+    layers = [l0] + [_init_block(k, cfg, plan)[0] for k in layer_keys[1:]]
+    params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    specs["layers"] = jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), block_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return params, specs
+
+
+def param_specs(cfg: ModelConfig, plan: ShardingPlan):
+    """Spec tree without materialising parameters (dry-run path)."""
+    captured = {}
+
+    def f(k):
+        params, specs = init_params(k, cfg, plan)
+        captured["specs"] = specs
+        return params
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return captured["specs"]
+
+
+# ------------------------------------------------------------------- forward
+
+def _block_apply(layer_params, cfg: ModelConfig, plan: ShardingPlan, mesh,
+                 x, positions, moe_opts, window: int):
+    h = rms_norm(x, layer_params["ln1"], cfg.norm_eps)
+    aux = {}
+    if cfg.family == "ssm":
+        x = x + ssm_mod.apply_mamba(layer_params["ssm"], cfg, h)
+        return x, aux
+    if cfg.family == "hybrid":
+        a = attn_mod.apply_attention(layer_params["attn"], cfg, h, positions, window=window)
+        m = ssm_mod.apply_mamba(layer_params["ssm"], cfg, h)
+        x = x + 0.5 * (a + m)                       # parallel heads (Hymba)
+    else:
+        x = x + attn_mod.apply_attention(layer_params["attn"], cfg, h, positions,
+                                         window=window)
+    h2 = rms_norm(x, layer_params["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_mod.apply_moe(layer_params["moe"], cfg, plan, mesh, h2, moe_opts)
+        x = x + y
+    else:
+        x = x + apply_mlp(layer_params["mlp"], h2)
+    return x, aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    plan: ShardingPlan,
+    mesh,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    moe_opts: Optional[moe_mod.MoEOptions] = None,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Token/embedding batch -> logits [B, S, V] (+ aux)."""
+    dp = _visible_axes(plan.dp_axes)
+    if cfg.frontend == "tokens":
+        tok = batch["tokens"]
+        x = params["embed"].astype(cfg.activation_dtype)[tok]
+        b, s = tok.shape
+    else:
+        x = batch["embeddings"].astype(cfg.activation_dtype)
+        b, s = x.shape[:2]
+    x_spec = P(dp, plan.tp_axis, None) if plan.sp_activations else P(dp, None, None)
+    x = jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, x_spec))
+    if cfg.mrope:
+        positions = batch.get("positions3")
+        if positions is None:
+            base = jnp.arange(s)[None].repeat(b, 0)
+            positions = jnp.stack([base, base, base], axis=1)
+    else:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    block = functools.partial(_block_apply, cfg=cfg, plan=plan, mesh=mesh,
+                              positions=positions, moe_opts=moe_opts, window=window)
+    sp_sharding = (jax.sharding.NamedSharding(mesh, P(dp, plan.tp_axis, None))
+                   if plan.sp_activations else None)
+
+    def scan_body(carry, layer_params):
+        fn = block
+        if cfg.remat == "block":
+            fn = jax.checkpoint(lambda lp, xx: block(layer_params=lp, x=xx),
+                                prevent_cse=False)
+            y, aux = fn(layer_params, carry)
+        else:
+            y, aux = fn(layer_params=layer_params, x=carry)
+        if sp_sharding is not None:
+            # sequence parallelism: residual stream lives seq-sharded on the
+            # tensor axis between blocks -> TP all-reduces lower to
+            # reduce-scatter (+ gather at the next consumer)
+            y = jax.lax.with_sharding_constraint(y, sp_sharding)
+        return y, aux
+
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(scan_body, x, params["layers"])
+    else:  # unrolled: exact cost_analysis accounting (dry-run cost variant)
+        aux_list = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux_i = scan_body(x, lp)
+            aux_list.append(aux_i)
+        auxs = jax.tree.map(lambda *xs: jnp.stack(xs), *aux_list) if aux_list and aux_list[0] else {}
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    aux = {k: v.mean() for k, v in auxs.items()} if auxs else {}
+    return logits, aux
+
+
+def loss_fn(params, cfg, plan, mesh, batch, *, moe_opts=None, window: int = 0,
+            aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, plan, mesh, batch,
+                          moe_opts=moe_opts, window=window)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    if aux and "aux_loss" in aux:
+        loss = loss + aux_weight * aux["aux_loss"]
+    metrics = {"loss": loss, "tokens": mask.sum(), **aux}
+    return loss, metrics
+
+
+# ------------------------------------------------------------------- prefill
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    plan: ShardingPlan,
+    mesh,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    moe_opts: Optional[moe_mod.MoEOptions] = None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Serving prefill: consume the prompt, emit (last-token logits, decode
+    state) — the real serve-side counterpart of the decode cells."""
+    dp = _visible_axes(plan.dp_axes)
+    if cfg.frontend == "tokens":
+        tok = batch["tokens"]
+        x = params["embed"].astype(cfg.activation_dtype)[tok]
+        b, s = tok.shape
+    else:
+        x = batch["embeddings"].astype(cfg.activation_dtype)
+        b, s = x.shape[:2]
+    x = jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(dp, None, None)))
+    if cfg.mrope:
+        positions = batch.get("positions3")
+        if positions is None:
+            base = jnp.arange(s)[None].repeat(b, 0)
+            positions = jnp.stack([base, base, base], axis=1)
+    else:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    window = cfg.sliding_window
+    cache_len = min(window, s) if window else s
+
+    def scan_body(carry, lp):
+        x = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        cache: Dict[str, Any] = {}
+        if cfg.family == "ssm":
+            y, st = ssm_mod.apply_mamba(lp["ssm"], cfg, h, return_state=True)
+            return x + y, st
+        if cfg.family == "hybrid":
+            a, ck, cv = attn_mod.apply_attention(lp["attn"], cfg, h, positions,
+                                                 window=window, return_kv=True)
+            m, st = ssm_mod.apply_mamba(lp["ssm"], cfg, h, return_state=True)
+            x = x + 0.5 * (a + m)
+            cache = {"cache_k": ck[:, :, -cache_len:], "cache_v": cv[:, :, -cache_len:], **st}
+        else:
+            a, ck, cv = attn_mod.apply_attention(lp["attn"], cfg, h, positions,
+                                                 return_kv=True)
+            x = x + a
+            cache = {"cache_k": ck[:, :, -cache_len:], "cache_v": cv[:, :, -cache_len:]}
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_mod.apply_moe(lp["moe"], cfg, plan, mesh, h2, moe_opts)
+            x = x + y
+        else:
+            x = x + apply_mlp(lp["mlp"], h2)
+        return x, cache
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(scan_body, x, params["layers"])
+    else:
+        cache_list = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, ci = scan_body(x, lp)
+            cache_list.append(ci)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+    x_last = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x_last, params["unembed"].astype(x.dtype))
+    state = dict(caches)
+    state["pos"] = jnp.asarray(s, jnp.int32)
+    return logits[:, 0], state
+
+
+# -------------------------------------------------------------------- decode
+
+def decode_state_structs(cfg: ModelConfig, plan: ShardingPlan, batch: int, s_max: int):
+    """Abstract decode-state descriptions + shardings (no allocation)."""
+    dp = tuple(plan.dp_axes)
+    tp = plan.tp_axis
+    structs: Dict[str, Any] = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs: Dict[str, Any] = {"pos": P()}
+    if cfg.has_attention:
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        window = cfg.sliding_window or s_max
+        cache_len = min(window, s_max)
+        shape = (cfg.n_layers, batch, hkv, cache_len, hd)
+        structs["cache_k"] = jax.ShapeDtypeStruct(shape, cfg.activation_dtype)
+        structs["cache_v"] = jax.ShapeDtypeStruct(shape, cfg.activation_dtype)
+        seq_ax = tp if plan.shard_kv_seq_decode else None
+        head_ax = None if plan.shard_kv_seq_decode else tp
+        specs["cache_k"] = specs["cache_v"] = P(None, dp, head_ax, seq_ax, None)
+    if cfg.has_ssm:
+        h, p, n, di = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_inner
+        structs["ssm"] = jax.ShapeDtypeStruct((cfg.n_layers, batch * h, p, n), jnp.float32)
+        structs["conv"] = jax.ShapeDtypeStruct((cfg.n_layers, batch, cfg.ssm_conv - 1, di),
+                                               cfg.activation_dtype)
+        specs["ssm"] = P(None, dp, None, None)
+        specs["conv"] = P(None, dp, None, tp)
+    return structs, specs
+
+
+def init_decode_state(cfg: ModelConfig, plan: ShardingPlan, batch: int, s_max: int):
+    """Allocate per-layer caches/states (stacked on L) + their shardings."""
+    structs, specs = decode_state_structs(cfg, plan, batch, s_max)
+    state = jax.tree.map(lambda st: jnp.zeros(st.shape, st.dtype), structs)
+    return state, specs
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    plan: ShardingPlan,
+    mesh,
+    state: Dict[str, Any],
+    tokens_or_embeds: jnp.ndarray,            # [B, 1] int32 or [B, 1, d]
+    *,
+    moe_opts: Optional[moe_mod.MoEOptions] = None,
+) -> Tuple[Dict[str, Any], jnp.ndarray]:
+    """One serving step: consume one token, emit next-token logits."""
+    dp = tuple(plan.dp_axes)
+    pos = state["pos"]
+    if cfg.frontend == "tokens":
+        x = params["embed"].astype(cfg.activation_dtype)[tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(cfg.activation_dtype)
+    b = x.shape[0]
+    if cfg.mrope:
+        pq = jnp.broadcast_to(pos[None, None], (b, 1))
+        positions_q = jnp.stack([pq, pq, pq], axis=1)
+    else:
+        positions_q = jnp.broadcast_to(pos[None, None], (b, 1))
+    window = cfg.sliding_window
+
+    def scan_body(carry, inp):
+        x = carry
+        lp, cache = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        new_cache = {}
+        if cfg.family == "ssm":
+            st = {"ssm": cache["ssm"], "conv": cache["conv"]}
+            st, y = ssm_mod.decode_mamba(lp["ssm"], cfg, st, h)
+            x = x + y
+            return x, st
+        if cfg.family == "hybrid":
+            a, ck, cv = attn_mod.decode_attention(
+                lp["attn"], cfg, h, cache["cache_k"], cache["cache_v"],
+                pos % cache["cache_k"].shape[2], positions_q, ring=True)
+            st = {"ssm": cache["ssm"], "conv": cache["conv"]}
+            st, m = ssm_mod.decode_mamba(lp["ssm"], cfg, st, h)
+            x = x + 0.5 * (a + m)
+            new_cache = {"cache_k": ck, "cache_v": cv, **st}
+        else:
+            a, ck, cv = attn_mod.decode_attention(
+                lp["attn"], cfg, h, cache["cache_k"], cache["cache_v"],
+                pos, positions_q, window=window)
+            x = x + a
+            new_cache = {"cache_k": ck, "cache_v": cv}
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_mod.apply_moe(lp["moe"], cfg, plan, mesh, h2, moe_opts)
+            x = x + y
+        else:
+            x = x + apply_mlp(lp["mlp"], h2)
+        return x, new_cache
+
+    cache_keys = [k for k in ("cache_k", "cache_v", "ssm", "conv") if k in state]
+    caches = {k: state[k] for k in cache_keys}
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(scan_body, x, (params["layers"], caches))
+    else:
+        nc_list = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            ci = jax.tree.map(lambda a: a[i], caches)
+            x, nc = scan_body(x, (lp, ci))
+            nc_list.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *nc_list)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    new_state = dict(state)
+    new_state.update(new_caches)
+    new_state["pos"] = pos + 1
+    return new_state, logits
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    """Convenience wrapper used by the launcher and examples."""
+
+    cfg: ModelConfig
+    plan: ShardingPlan
+    mesh: Any
+
+    def init(self, key):
+        return init_params(key, self.cfg, self.plan)
+
+    def loss(self, params, batch, **kw):
+        return loss_fn(params, self.cfg, self.plan, self.mesh, batch, **kw)
+
+    def decode(self, params, state, tok, **kw):
+        return decode_step(params, self.cfg, self.plan, self.mesh, state, tok, **kw)

@@ -1,0 +1,36 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+Checkpoints are mesh-agnostic (host-gathered arrays, named-axis specs), so
+shrinking 512→256 chips (pod loss) or growing back is: rebuild mesh →
+rebuild NamedShardings from the same PartitionSpec tree → device_put.
+Global batch is preserved by rescaling microbatches (same math, new layout).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+__all__ = ["remesh", "shardings_for"]
+
+
+def shardings_for(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def remesh(state: Any, specs: Any, new_mesh) -> Any:
+    """Move a (host or device) state pytree onto a new mesh."""
+    shardings = shardings_for(new_mesh, specs)
+    return jax.tree.map(
+        lambda leaf, sh: jax.device_put(jax.device_get(leaf), sh), state, shardings)
+
+
+def scaled_microbatches(old_microbatches: int, old_dp: int, new_dp: int) -> int:
+    """Keep the global batch fixed when the data-parallel extent changes."""
+    scaled = old_microbatches * old_dp
+    assert scaled % new_dp == 0, (old_microbatches, old_dp, new_dp)
+    return max(1, scaled // new_dp)

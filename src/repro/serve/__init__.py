@@ -1,0 +1,3 @@
+"""Batched serving engine over the jitted decode step."""
+from .engine import Request, ServeEngine
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,102 @@
+"""Batched serving engine: continuous batching over a jitted decode step.
+
+``ServeEngine`` keeps a fixed-width slot array (the serving batch); requests
+occupy free slots, finished sequences free them — the standard continuous-
+batching loop, scale-invariant because the jitted ``decode_step`` shape never
+changes.  Sampling: greedy or temperature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShardingPlan
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [P] int32 tokens (or [P, d] embeddings)
+    max_new: int = 16
+    temperature: float = 0.0
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, plan: ShardingPlan, mesh, params,
+                 *, slots: int = 4, s_max: int = 256, seed: int = 0):
+        self.cfg, self.plan, self.mesh = cfg, plan, mesh
+        self.params = params
+        self.slots = slots
+        self.s_max = s_max
+        self.key = jax.random.PRNGKey(seed)
+        self.state, _ = T.init_decode_state(cfg, plan, slots, s_max)
+        self._active: Dict[int, Request] = {}
+        self._slot_req: List[Optional[int]] = [None] * slots
+        self._queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda params, state, tok: T.decode_step(params, cfg, plan, mesh, state, tok))
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self._slot_req[i] is None and self._queue:
+                req = self._queue.pop(0)
+                self._slot_req[i] = req.rid
+                self._active[req.rid] = req
+                req._fed = 0            # prompt cursor
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine tick = one decode_step over the slot batch."""
+        self._admit()
+        tok = np.zeros((self.slots, 1), np.int32)
+        for i, rid in enumerate(self._slot_req):
+            if rid is None:
+                continue
+            req = self._active[rid]
+            if req._fed < len(req.prompt):
+                tok[i, 0] = req.prompt[req._fed]
+                req._fed += 1
+            elif req.out:
+                tok[i, 0] = req.out[-1]
+        self.state, logits = self._decode(self.params, self.state, jnp.asarray(tok))
+        logits = np.asarray(logits[:, 0].astype(jnp.float32))
+        for i, rid in enumerate(self._slot_req):
+            if rid is None:
+                continue
+            req = self._active[rid]
+            if req._fed < len(req.prompt):
+                continue                       # still prefilling this slot
+            if req.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(sub, jnp.asarray(logits[i]) / req.temperature))
+            else:
+                nxt = int(logits[i].argmax())
+            req.out.append(nxt)
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self._slot_req[i] = None
+                del self._active[rid]
+        return sum(r is not None for r in self._slot_req)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen = set()
+        for _ in range(max_ticks):
+            if not self._queue and not self._active:
+                break
+            self.step()
+        return finished

@@ -1,0 +1,119 @@
+"""The FPGA-switch DSE problem — Algorithm 1 instantiated on the paper's domain.
+
+Plugs the resource model, statistical surrogate and network simulator into the
+generic Progressive-Constraint-Satisfaction engine (``repro.core.dse``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.archspec import ArchRequest, SwitchArch, enumerate_candidates
+from repro.core.binding import BoundProtocol
+from repro.core.dse import (
+    DSEProblem,
+    ResourceBudget,
+    SLA,
+    SurrogateResult,
+    VerifyResult,
+    depth_for_drop_rate,
+    run_dse,
+)
+from repro.core.features import TraceFeatures, analyze
+from .backannotate import annotate
+from .netsim import NetSimConfig, run_netsim
+from .resources import ALVEO_U45N, BRAM_BITS, synthesize
+from .surrogate import run_surrogate
+
+__all__ = ["SwitchDSEProblem", "optimize_switch"]
+
+
+def align_depth_to_bram(d_opt: int, bus_bits: int) -> int:
+    """AlignToBRAM: round the depth up to a whole number of RAMB36 rows."""
+    entries_per_bram = max(1, BRAM_BITS // bus_bits)
+    return int(math.ceil(max(d_opt, 1) / entries_per_bram) * entries_per_bram)
+
+
+class SwitchDSEProblem(DSEProblem):
+    def __init__(
+        self,
+        request: ArchRequest,
+        bound: BoundProtocol,
+        trace,
+        *,
+        back_annotation: bool = True,
+        headroom: float = 1.25,
+    ):
+        self.request = request
+        self.bound = bound
+        self.trace = trace
+        self.features: TraceFeatures = analyze(trace)
+        self.back_annotation = back_annotation
+        self.headroom = headroom
+
+    # ------------------------------------------------------------- stage 1
+    def candidates(self) -> List[SwitchArch]:
+        return enumerate_candidates(self.request)
+
+    def static_timing(self, a: SwitchArch) -> Tuple[float, float]:
+        rep = synthesize(a, self.bound)
+        # one flit of the smallest packet must clear the pipe before the next
+        s_min_wire = self.features.s_min + self.bound.header_bytes
+        flits = max(1, math.ceil(s_min_wire / (a.bus_bits / 8)))
+        t_proc = a.ii * flits / (rep.fmax_mhz * 1e6)
+        t_arrival = s_min_wire * 8 / (self.trace.link_gbps * 1e9)
+        return t_proc, t_arrival
+
+    # ------------------------------------------------------------- stage 2
+    def surrogate(self, a: SwitchArch) -> SurrogateResult:
+        return run_surrogate(a, self.bound, self.trace,
+                             back_annotation=self.back_annotation,
+                             i_burst=self.features.i_burst)
+
+    # ------------------------------------------------------------- stage 3
+    def size_buffers(self, a: SwitchArch, q_occupancy: np.ndarray, eps: float) -> Optional[SwitchArch]:
+        d_opt = depth_for_drop_rate(q_occupancy, eps)
+        d = align_depth_to_bram(int(d_opt * self.headroom) + 1, a.bus_bits)
+        return a.with_depth(d)
+
+    def resources(self, a: SwitchArch) -> Dict[str, float]:
+        rep = synthesize(a, self.bound)
+        return {"luts": rep.luts, "ffs": rep.ffs, "brams": rep.brams, "bram": rep.brams}
+
+    # ------------------------------------------------------------- stage 4
+    def verify(self, a: SwitchArch) -> VerifyResult:
+        return run_netsim(a, self.bound, self.trace,
+                          back_annotation=self.back_annotation,
+                          i_burst=self.features.i_burst)
+
+    def objectives(self, a: SwitchArch, v: VerifyResult) -> Tuple[float, float]:
+        # Table II reports *average* latency; p99 is already an SLA constraint
+        rep = synthesize(a, self.bound)
+        return (v.mean_latency_ns, rep.brams)
+
+    def diversity_key(self, a: SwitchArch):
+        return (a.sched, a.voq)
+
+
+def optimize_switch(
+    request: ArchRequest,
+    bound: BoundProtocol,
+    trace,
+    *,
+    sla: Optional[SLA] = None,
+    budget: Optional[ResourceBudget] = None,
+    back_annotation: bool = True,
+    delta: float = 0.2,
+    top_k: int = 8,
+    verbose: bool = False,
+):
+    """One-call wrapper: trace in, Pareto-optimal switch out (Table II flow)."""
+    problem = SwitchDSEProblem(request, bound, trace, back_annotation=back_annotation)
+    sla = sla or SLA(p99_latency_ns=math.inf, drop_rate=1e-3)
+    budget = budget or ResourceBudget(dict(ALVEO_U45N))
+    result = run_dse(problem, sla, budget, delta=delta, top_k=top_k, verbose=verbose)
+    return result, problem

@@ -1,0 +1,18 @@
+"""Cycle-level JAX model of the SPAC switch datapath (paper SS III-B).
+
+Module map: parser.py (SS III-B.1), forward_table.py (SS III-B.2),
+voq.py (SS III-B.3), scheduler.py (SS III-B.4), switch.py (composition;
+egress/deparser is the departure path inside ``simulate``).
+"""
+from .forward_table import BROADCAST, init_table, learn, lookup
+from .parser import make_field_extractor, n_header_words, pack_header_words
+from .scheduler import SchedState, init_sched, schedule
+from .switch import SwitchSimResult, prepare_cycle_inputs, simulate
+from .voq import VOQState, init_voq, occupancy, enqueue, dequeue
+
+__all__ = [
+    "BROADCAST", "SchedState", "SwitchSimResult", "VOQState", "dequeue",
+    "enqueue", "init_sched", "init_table", "init_voq", "learn", "lookup",
+    "make_field_extractor", "n_header_words", "occupancy",
+    "pack_header_words", "prepare_cycle_inputs", "schedule", "simulate",
+]

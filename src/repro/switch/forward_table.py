@@ -1,0 +1,107 @@
+"""Forward tables (§III-B.2): FullLookup array and Multi-Bank Hash table.
+
+Both variants keep address→port mappings, learn the source address on every
+arrival, and answer multi-port lookups in parallel (the FPGA design fully
+partitions the array / banks the hash table so every port hits memory in the
+same cycle).  A lookup miss yields ``BROADCAST`` (-2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.archspec import ForwardTableKind, SwitchArch
+
+__all__ = ["BROADCAST", "FullLookupState", "MultiBankState", "init_table", "lookup", "learn"]
+
+BROADCAST = -2
+_EMPTY = -1
+
+
+class FullLookupState(NamedTuple):
+    ports: jnp.ndarray  # [2^addr_bits] int32, -1 = unknown
+
+
+class MultiBankState(NamedTuple):
+    keys: jnp.ndarray    # [banks, depth] uint32
+    ports: jnp.ndarray   # [banks, depth] int32, -1 = empty
+    mults: jnp.ndarray   # [banks] uint32 per-bank hash multipliers
+
+
+TableState = Union[FullLookupState, MultiBankState]
+
+# Knuth-style odd multipliers (distinct per bank → near-independent hashes)
+_HASH_MULTS = (2654435761, 2246822519, 3266489917, 668265263, 374761393, 2869860233, 3624381081, 961748927)
+
+
+def init_table(arch: SwitchArch) -> TableState:
+    if arch.fwd is ForwardTableKind.FULL_LOOKUP:
+        return FullLookupState(ports=jnp.full((1 << arch.addr_bits,), _EMPTY, dtype=jnp.int32))
+    mults = jnp.asarray([_HASH_MULTS[b % len(_HASH_MULTS)] for b in range(arch.hash_banks)], dtype=jnp.uint32)
+    return MultiBankState(
+        keys=jnp.zeros((arch.hash_banks, arch.hash_depth), dtype=jnp.uint32),
+        ports=jnp.full((arch.hash_banks, arch.hash_depth), _EMPTY, dtype=jnp.int32),
+        mults=mults,
+    )
+
+
+def _bank_slots(state: MultiBankState, key: jnp.ndarray) -> jnp.ndarray:
+    """Per-bank slot index for a key [..., banks] (multiplicative hashing)."""
+    depth = state.keys.shape[1]
+    h = key[..., None].astype(jnp.uint32) * state.mults  # [..., banks]
+    return (h >> jnp.uint32(16)).astype(jnp.int32) % depth
+
+
+def lookup(arch: SwitchArch, state: TableState, dst_key: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Parallel multi-port lookup.  dst_key [P] uint32 -> out_port [P] int32.
+
+    Returns BROADCAST (-2) on miss, -1 for invalid lanes.
+    """
+    if arch.fwd is ForwardTableKind.FULL_LOOKUP:
+        mask = jnp.uint32((1 << arch.addr_bits) - 1)
+        port = state.ports[(dst_key & mask).astype(jnp.int32)]
+    else:
+        slots = _bank_slots(state, dst_key)                       # [P, B]
+        b_idx = jnp.arange(state.keys.shape[0])
+        keys = state.keys[b_idx[None, :], slots]                  # [P, B]
+        ports = state.ports[b_idx[None, :], slots]                # [P, B]
+        hit = (keys == dst_key[..., None]) & (ports != _EMPTY)
+        port = jnp.where(hit.any(-1), ports[jnp.arange(dst_key.shape[0]), hit.argmax(-1)], _EMPTY)
+    port = jnp.where(port == _EMPTY, BROADCAST, port)
+    return jnp.where(valid, port, _EMPTY)
+
+
+def learn(arch: SwitchArch, state: TableState, src_key: jnp.ndarray, in_port: jnp.ndarray, valid: jnp.ndarray) -> TableState:
+    """Learn src→port on every arrival (parallel across ports).
+
+    MultiBank insert: first bank whose slot is free or already holds the key;
+    if every bank slot is occupied by a different key, evict in bank 0 — the
+    conflict behaviour the DSE's II penalty models.
+    """
+    if arch.fwd is ForwardTableKind.FULL_LOOKUP:
+        mask = jnp.uint32((1 << arch.addr_bits) - 1)
+        idx = (src_key & mask).astype(jnp.int32)
+        # invalid lanes scatter out of bounds and are dropped (aliasing a real
+        # index would clobber concurrently-learned entries)
+        idx = jnp.where(valid, idx, state.ports.shape[0])
+        return FullLookupState(
+            ports=state.ports.at[idx].set(in_port.astype(jnp.int32), mode="drop"))
+
+    def insert_one(st: MultiBankState, args):
+        key, port, ok = args
+        slots = _bank_slots(st, key[None])[0]                    # [B]
+        b_idx = jnp.arange(st.keys.shape[0])
+        cur_keys = st.keys[b_idx, slots]
+        cur_ports = st.ports[b_idx, slots]
+        free_or_same = (cur_ports == _EMPTY) | (cur_keys == key)
+        bank = jnp.where(free_or_same.any(), free_or_same.argmax(), 0)  # evict bank 0
+        slot = slots[bank]
+        new_keys = st.keys.at[bank, slot].set(jnp.where(ok, key, st.keys[bank, slot]))
+        new_ports = st.ports.at[bank, slot].set(jnp.where(ok, port.astype(jnp.int32), st.ports[bank, slot]))
+        return MultiBankState(new_keys, new_ports, st.mults), None
+
+    state, _ = jax.lax.scan(insert_one, state, (src_key, in_port, valid))
+    return state

@@ -1,0 +1,82 @@
+"""Protocol-aware parser (§III-B.1) — JAX functional model.
+
+The SPAC parser is *template-driven*: protocol details are baked in at compile
+time (no TCAM, no runtime config registers).  Here the ``ParserPlan`` produced
+by ``Protocol.compile`` plays the role of the instantiated C++ template: every
+field access lowers to hard-wired shifts/masks over 32-bit header words, with
+extra pieces only for fields that straddle word boundaries.
+
+``pack_header_words`` is the vectorised serialiser (the NetBlocks driver
+role); ``make_field_extractor`` returns a jit-able extractor identical in
+contract to the generated Pallas kernel in ``repro.kernels.parser``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsl import ParserPlan, Protocol
+
+__all__ = ["WORD_BITS", "n_header_words", "pack_header_words", "make_field_extractor"]
+
+WORD_BITS = 32
+
+
+def n_header_words(protocol: Protocol) -> int:
+    return -(-protocol.header_bits // WORD_BITS)
+
+
+def pack_header_words(protocol: Protocol, values: Dict[str, np.ndarray]) -> np.ndarray:
+    """Vectorised bit-exact packing into uint32 words, MSB-first.
+
+    values[name] is an int array [n]; fields absent default to Field.default.
+    Returns uint32 [n, n_words].
+    """
+    plan = protocol.compile(WORD_BITS)
+    n = len(next(iter(values.values())))
+    words = np.zeros((n, n_header_words(protocol)), dtype=np.uint64)
+    for f in protocol.fields:
+        v = np.asarray(values.get(f.name, np.full(n, f.default)), dtype=np.uint64)
+        for s in plan.slices_for(f.name):
+            take = s.hi - s.lo + 1
+            piece = (v >> np.uint64(s.dst_shift)) & np.uint64((1 << take) - 1)
+            words[:, s.word] |= piece << np.uint64(s.lo)
+    return words.astype(np.uint32)
+
+
+def make_field_extractor(
+    protocol: Protocol, field_names: Sequence[str]
+) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray, ...]]:
+    """Compile-time specialised extractor: uint32 words [..., W] -> uint32 values.
+
+    Fields wider than 32 bits are truncated to their low 32 bits (the switch
+    uses addresses modulo table size, so this is lossless for lookups of
+    addr_bits <= 32; documented in DESIGN.md).
+    """
+    plan = protocol.compile(WORD_BITS)
+    baked = []
+    for name in field_names:
+        slices = []
+        for s in plan.slices_for(name):
+            take = s.hi - s.lo + 1
+            if s.dst_shift >= WORD_BITS:
+                continue  # piece entirely above bit 31: truncated away
+            slices.append((s.word, s.lo, take, s.dst_shift))
+        baked.append(tuple(slices))
+    baked = tuple(baked)
+
+    def extract(words: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+        words = words.astype(jnp.uint32)
+        outs = []
+        for slices in baked:
+            v = jnp.zeros(words.shape[:-1], dtype=jnp.uint32)
+            for word, lo, take, dst_shift in slices:
+                piece = (words[..., word] >> jnp.uint32(lo)) & jnp.uint32((1 << take) - 1)
+                v = v | (piece << jnp.uint32(dst_shift))
+            outs.append(v)
+        return tuple(outs)
+
+    return extract

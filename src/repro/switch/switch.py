@@ -1,0 +1,237 @@
+"""The composed SPAC switch: parser ∘ kernels ∘ table ∘ VOQ ∘ scheduler ∘ deparser.
+
+A cycle-level, fully vectorised JAX model of the generated switch.  One
+``lax.scan`` step = one clock cycle of the FPGA datapath:
+
+  1. ingress: per-port arriving flit (head flit carries the packed header);
+     the compile-time-specialised parser extracts routing/src keys,
+  2. custom kernels (optional, §III-B.5) may rewrite destinations/drop,
+  3. the forward table learns src→port and looks up the output port
+     (miss ⇒ broadcast),
+  4. the VOQ buffer enqueues (drops when full),
+  5. the scheduler computes an input/output matching,
+  6. matched heads dequeue; multi-flit packets hold their input & output busy
+     for ``size_flits`` cycles (serialisation),
+
+This model is the repo's "real hardware": the statistical surrogate
+(``repro.sim.surrogate``) is validated against it (Fig. 6), and the DSE's
+stage-4 verification runs it via the network simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.archspec import SwitchArch
+from repro.core.binding import BoundProtocol
+from . import forward_table as ft
+from . import scheduler as sch
+from . import voq as vq
+from .parser import make_field_extractor, n_header_words, pack_header_words
+
+__all__ = ["SwitchSimResult", "prepare_cycle_inputs", "simulate"]
+
+
+@dataclasses.dataclass
+class SwitchSimResult:
+    latency_cycles: np.ndarray      # per delivered packet (last copy), queueing incl.
+    latency_ns: np.ndarray          # + pipeline latency, at fclk
+    drops: int
+    offered: int
+    delivered_copies: int
+    throughput_gbps: float          # delivered payload+header bits / sim time
+    goodput_gbps: float             # delivered payload bits / sim time
+    occ_max: np.ndarray             # [N, N] per-queue max occupancy
+    occ_trace: np.ndarray           # [T] per-cycle max queue occupancy
+    data_slots_max: int
+    n_cycles: int
+    fclk_hz: float
+
+    @property
+    def drop_rate(self) -> float:
+        return self.drops / max(self.offered, 1)
+
+    def p(self, q: float) -> float:
+        return float(np.percentile(self.latency_ns, q)) if self.latency_ns.size else math.inf
+
+
+def prepare_cycle_inputs(
+    arch: SwitchArch,
+    bound: BoundProtocol,
+    trace,
+    fclk_hz: float,
+    *,
+    drain_cycles: int = 2048,
+    max_cycles: Optional[int] = None,
+) -> Dict[str, np.ndarray]:
+    """Bin a trace into per-cycle per-port arrivals with link serialisation."""
+    n = arch.n_ports
+    t = np.asarray(trace.time_s, dtype=np.float64)
+    src = np.asarray(trace.src, dtype=np.int64) % n
+    dst = np.asarray(trace.dst, dtype=np.int64) % n
+    payload = np.asarray(trace.payload_bytes, dtype=np.int64)
+    order = np.argsort(t, kind="stable")
+    t, src, dst, payload = t[order], src[order], dst[order], payload[order]
+    npkt = t.size
+
+    wire_bytes = payload + bound.header_bytes
+    flit_bytes = arch.bus_bits // 8
+    size_flits = np.maximum(1, -(-wire_bytes // flit_bytes)).astype(np.int32)
+
+    # ingress serialisation: each port delivers one flit/cycle
+    arr_cycle = np.zeros(npkt, dtype=np.int64)
+    port_free = np.zeros(n, dtype=np.int64)
+    rel = t - t.min()
+    for k in range(npkt):
+        c = int(round(rel[k] * fclk_hz))
+        c = max(c, port_free[src[k]])
+        arr_cycle[k] = c
+        port_free[src[k]] = c + size_flits[k]
+
+    total_cycles = int(arr_cycle.max() + size_flits.max() + drain_cycles) if npkt else drain_cycles
+    if max_cycles is not None and total_cycles > max_cycles:
+        total_cycles = max_cycles
+    keep = arr_cycle < total_cycles
+    arr_pid = np.full((total_cycles, n), -1, dtype=np.int32)
+    arr_pid[arr_cycle[keep], src[keep]] = np.nonzero(keep)[0].astype(np.int32)
+
+    # pack headers once (the host driver / NetBlocks role)
+    vals = {
+        bound.semantics["routing_key"]: dst.astype(np.uint64),
+        bound.semantics["src_key"]: src.astype(np.uint64),
+    }
+    if bound.has("length"):
+        f = bound.protocol.field(bound.semantics["length"])
+        vals[bound.semantics["length"]] = np.minimum(payload, (1 << f.bits) - 1).astype(np.uint64)
+    words = pack_header_words(bound.protocol, vals)
+
+    return dict(
+        arr_pid=arr_pid,
+        header_words=words.astype(np.uint32),
+        size_flits=size_flits,
+        payload_bytes=payload.astype(np.int64),
+        wire_bytes=wire_bytes.astype(np.int64),
+        arr_cycle=arr_cycle,
+        n_cycles=np.int64(total_cycles),
+    )
+
+
+class _Carry(NamedTuple):
+    table: object
+    voq: vq.VOQState
+    sched: sch.SchedState
+    busy_in: jnp.ndarray     # [N] cycles remaining
+    busy_out: jnp.ndarray
+    dep_cycle: jnp.ndarray   # [n_packets] last-copy departure cycle (-1 = not yet)
+    delivered: jnp.ndarray   # scalar copies delivered
+    occ_max: jnp.ndarray     # [N, N]
+    data_max: jnp.ndarray    # scalar
+    kstates: Tuple           # custom kernel states
+
+
+def simulate(
+    arch: SwitchArch,
+    bound: BoundProtocol,
+    trace,
+    *,
+    fclk_hz: float,
+    max_cycles: Optional[int] = None,
+) -> SwitchSimResult:
+    """Run the cycle-level switch on a trace and gather per-packet stats."""
+    prep = prepare_cycle_inputs(arch, bound, trace, fclk_hz, max_cycles=max_cycles)
+    n = arch.n_ports
+    npkt = prep["header_words"].shape[0]
+    header_words = jnp.asarray(prep["header_words"])
+    size_flits = jnp.asarray(prep["size_flits"])
+    extractor = make_field_extractor(
+        bound.protocol, [bound.semantics["routing_key"], bound.semantics["src_key"]]
+    )
+    kernels = list(arch.custom_kernels)
+
+    # xs carries (cycle_index, arrivals)
+    cycles = jnp.arange(prep["n_cycles"], dtype=jnp.int32)
+
+    def cycle_step(c: _Carry, xs):
+        cyc, pids = xs
+        valid = pids >= 0
+        pid_safe = jnp.clip(pids, 0)
+        words = header_words[pid_safe]                       # [N, W]
+        dst_key, src_key = extractor(words)
+        in_ports = jnp.arange(n, dtype=jnp.int32)
+        # learn then lookup (learning on every arrival, §III-B.2)
+        table = ft.learn(arch, c.table, src_key, in_ports, valid)
+        out_port = ft.lookup(arch, table, dst_key, valid)
+        # custom kernel hooks
+        kstates = []
+        for spec, kst in zip(kernels, c.kstates):
+            if spec.fn is not None:
+                kst, out_port, valid = spec.fn(kst, pids, out_port, valid, cyc)
+            kstates.append(kst)
+        voq = vq.enqueue(arch, c.voq, pids, out_port, valid)
+        occ = vq.occupancy(voq)
+        match, sched = sch.schedule(arch, c.sched, occ, c.busy_in > 0, c.busy_out > 0)
+        voq, dep_pid, dep_in = vq.dequeue(arch, voq, match)
+        occ_after = vq.occupancy(voq)
+        sched = sch.release_exhausted(sched, match, occ_after)
+        # busy counters: transfer occupies ports for size_flits cycles total
+        dep_valid = dep_pid >= 0
+        dep_sz = size_flits[jnp.clip(dep_pid, 0)]
+        busy_out = jnp.maximum(c.busy_out - 1, 0)
+        busy_out = jnp.where(dep_valid, dep_sz - 1, busy_out)
+        busy_in = jnp.maximum(c.busy_in - 1, 0)
+        in_sz = jnp.zeros((n,), jnp.int32).at[jnp.clip(dep_in, 0)].max(
+            jnp.where(dep_valid, dep_sz - 1, 0))
+        busy_in = jnp.maximum(busy_in, in_sz)
+        # departure bookkeeping (last flit leaves at cyc + size)
+        dep_cycle = c.dep_cycle.at[jnp.clip(dep_pid, 0)].max(
+            jnp.where(dep_valid, cyc + dep_sz, -1))
+        delivered = c.delivered + dep_valid.sum()
+        occ_max = jnp.maximum(c.occ_max, occ)
+        data_max = jnp.maximum(c.data_max, voq.data_slots)
+        carry = _Carry(table, voq, sched, busy_in, busy_out, dep_cycle,
+                       delivered, occ_max, data_max, tuple(kstates))
+        return carry, occ.max()
+
+    init = _Carry(
+        table=ft.init_table(arch),
+        voq=vq.init_voq(arch, npkt),
+        sched=sch.init_sched(arch),
+        busy_in=jnp.zeros((n,), jnp.int32),
+        busy_out=jnp.zeros((n,), jnp.int32),
+        dep_cycle=jnp.full((max(npkt, 1),), -1, dtype=jnp.int32),
+        delivered=jnp.zeros((), jnp.int32),
+        occ_max=jnp.zeros((n, n), jnp.int32),
+        data_max=jnp.zeros((), jnp.int32),
+        kstates=tuple(getattr(k, "init_state", None) for k in kernels),
+    )
+    arr = jnp.asarray(prep["arr_pid"])
+    final, occ_trace = jax.lax.scan(cycle_step, init, (cycles, arr))
+
+    dep = np.asarray(final.dep_cycle)
+    arrc = prep["arr_cycle"]
+    done = dep >= 0
+    lat_cycles = (dep[done] - arrc[done]).astype(np.float64)
+    lat_ns = (lat_cycles + arch.pipeline_depth) / fclk_hz * 1e9
+    sim_s = float(prep["n_cycles"]) / fclk_hz
+    delivered_bits = float(prep["wire_bytes"][done].sum() * 8)
+    goodput_bits = float(prep["payload_bytes"][done].sum() * 8)
+    return SwitchSimResult(
+        latency_cycles=lat_cycles,
+        latency_ns=lat_ns,
+        drops=int(final.voq.drops),
+        offered=int(npkt),
+        delivered_copies=int(final.delivered),
+        throughput_gbps=delivered_bits / sim_s / 1e9,
+        goodput_gbps=goodput_bits / sim_s / 1e9,
+        occ_max=np.asarray(final.occ_max),
+        occ_trace=np.asarray(occ_trace),
+        data_slots_max=int(final.data_max),
+        n_cycles=int(prep["n_cycles"]),
+        fclk_hz=fclk_hz,
+    )

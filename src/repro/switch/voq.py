@@ -1,0 +1,125 @@
+"""Virtual-Output-Queue buffers (§III-B.3): N×N data VOQs and Shared VOQs.
+
+* **N×N** — fully partitioned per-(input, output) data queues; broadcast
+  packets are *copied* into every queue of the source (memory duplication,
+  the stated drawback), each queue bounded by ``voq_depth``.
+* **Shared** — one central data buffer with pointer-based per-(i,j) queues
+  and a per-packet reference count (the bitmap of pending destinations):
+  broadcast stores payload once and replicates only pointers.  Total data
+  capacity is ``n_ports × voq_depth`` slots (vs N²×depth for N×N), which is
+  where the BRAM saving comes from; the logic overhead of pointer management
+  shows up as +1 pipeline stage in ``SwitchArch.pipeline_depth``.
+
+Queues store packet *ids*; payload width only affects the resource model and
+multi-flit timing (handled by the switch's busy counters).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.archspec import SwitchArch, VOQKind
+from .forward_table import BROADCAST
+
+__all__ = ["VOQState", "init_voq", "occupancy", "enqueue", "dequeue"]
+
+
+class VOQState(NamedTuple):
+    queue: jnp.ndarray       # [N, N, D] int32 packet ids
+    head: jnp.ndarray        # [N, N] int32
+    tail: jnp.ndarray        # [N, N] int32
+    data_slots: jnp.ndarray  # scalar int32: payload slots in use (shared semantics)
+    rem_copies: jnp.ndarray  # [n_packets] int32 pending copies (shared refcount)
+    drops: jnp.ndarray       # scalar int32 dropped copies
+
+
+def init_voq(arch: SwitchArch, n_packets: int) -> VOQState:
+    n, d = arch.n_ports, arch.voq_depth
+    return VOQState(
+        queue=jnp.full((n, n, d), -1, dtype=jnp.int32),
+        head=jnp.zeros((n, n), dtype=jnp.int32),
+        tail=jnp.zeros((n, n), dtype=jnp.int32),
+        data_slots=jnp.zeros((), dtype=jnp.int32),
+        rem_copies=jnp.zeros((max(n_packets, 1),), dtype=jnp.int32),
+        drops=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def shared_capacity(arch: SwitchArch) -> int:
+    return arch.n_ports * arch.voq_depth
+
+
+def occupancy(st: VOQState) -> jnp.ndarray:
+    return st.tail - st.head
+
+
+def enqueue(
+    arch: SwitchArch,
+    st: VOQState,
+    pids: jnp.ndarray,      # [N] int32 arriving packet id per input port (-1 none)
+    out_ports: jnp.ndarray, # [N] int32 destination port, BROADCAST, or -1 invalid
+    valid: jnp.ndarray,     # [N] bool
+) -> VOQState:
+    n, d = arch.n_ports, arch.voq_depth
+    ports = jnp.arange(n, dtype=jnp.int32)
+    # fanout matrix: unicast one-hot, broadcast = everyone but the source
+    uni = out_ports[:, None] == ports[None, :]
+    bcast = (out_ports[:, None] == BROADCAST) & (ports[None, :] != ports[:, None])
+    fan = (uni | bcast) & valid[:, None]                                   # [N,N]
+    occ = occupancy(st)
+    room = occ < d
+    if arch.voq is VOQKind.SHARED:
+        # shared data buffer admission: packets admitted in port order until full
+        wants = fan.any(1)
+        order = jnp.cumsum(wants.astype(jnp.int32))
+        admit = wants & (st.data_slots + order <= shared_capacity(arch))
+        fan = fan & admit[:, None]
+    store = fan & room                                                     # [N,N]
+    dropped = (fan & ~room).sum() + (
+        (jnp.zeros((), jnp.int32))
+        if arch.voq is not VOQKind.SHARED
+        else ((uni | bcast) & valid[:, None]).any(1).sum() - fan.any(1).sum()
+    )
+    # ring-buffer write at tail
+    slot = st.tail % d                                                     # [N,N]
+    wmask = store[:, :, None] & (jnp.arange(d)[None, None, :] == slot[:, :, None])
+    queue = jnp.where(wmask, pids[:, None, None], st.queue)
+    tail = st.tail + store.astype(jnp.int32)
+    # refcounts / data slot accounting
+    copies = store.sum(1)                                                  # per input
+    pid_safe = jnp.clip(pids, 0)
+    rem = st.rem_copies.at[pid_safe].add(jnp.where(valid, copies, 0))
+    if arch.voq is VOQKind.SHARED:
+        data_slots = st.data_slots + store.any(1).sum()                    # one slot per packet
+    else:
+        data_slots = st.data_slots + store.sum()                           # one per copy
+    return VOQState(queue, st.head, tail, data_slots.astype(jnp.int32), rem,
+                    st.drops + dropped.astype(jnp.int32))
+
+
+def dequeue(
+    arch: SwitchArch,
+    st: VOQState,
+    match: jnp.ndarray,     # [N, N] bool accepted matching
+) -> Tuple[VOQState, jnp.ndarray, jnp.ndarray]:
+    """Pop matched heads. Returns (state, dep_pid[N_out], dep_in[N_out])."""
+    n, d = arch.n_ports, arch.voq_depth
+    slot = st.head % d
+    heads = jnp.take_along_axis(st.queue, slot[:, :, None], axis=2)[:, :, 0]  # [N,N]
+    head = st.head + match.astype(jnp.int32)
+    pid_mat = jnp.where(match, heads, -1)
+    dep_pid = pid_mat.max(0)                       # one match per column
+    dep_in = jnp.where(match, jnp.arange(n, dtype=jnp.int32)[:, None], -1).max(0)
+    # refcount update
+    popped = jnp.where(match, heads, 0)
+    dec = match.astype(jnp.int32)
+    rem = st.rem_copies.at[jnp.clip(popped, 0)].add(-dec.astype(jnp.int32) * match)
+    if arch.voq is VOQKind.SHARED:
+        # free the data slot only when the last pending copy leaves
+        freed = (match & (jnp.take(rem, jnp.clip(heads, 0)) <= 0)).sum()
+    else:
+        freed = match.sum()
+    data_slots = st.data_slots - freed.astype(jnp.int32)
+    return VOQState(st.queue, head, st.tail, data_slots, rem, st.drops), dep_pid, dep_in

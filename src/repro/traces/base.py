@@ -1,0 +1,80 @@
+"""Trace substrate: the packet-trace datatype shared by simulators and DSE."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Trace", "merge", "poisson_times", "burst_times"]
+
+
+@dataclasses.dataclass
+class Trace:
+    """A packet trace: parallel arrays sorted by time."""
+
+    name: str
+    time_s: np.ndarray        # float64 [n]
+    src: np.ndarray           # int32 [n] source port/host
+    dst: np.ndarray           # int32 [n] destination port/host
+    payload_bytes: np.ndarray # int64 [n]
+    n_ports: int
+    link_gbps: float = 100.0
+
+    def __post_init__(self):
+        order = np.argsort(self.time_s, kind="stable")
+        self.time_s = np.asarray(self.time_s, np.float64)[order]
+        self.src = np.asarray(self.src, np.int32)[order]
+        self.dst = np.asarray(self.dst, np.int32)[order]
+        self.payload_bytes = np.asarray(self.payload_bytes, np.int64)[order]
+
+    def __len__(self) -> int:
+        return int(self.time_s.size)
+
+    @property
+    def duration_s(self) -> float:
+        return float(self.time_s.max() - self.time_s.min()) if len(self) > 1 else 0.0
+
+    def offered_gbps(self, header_bytes: int = 0) -> float:
+        bits = float((self.payload_bytes + header_bytes).sum() * 8)
+        return bits / max(self.duration_s, 1e-12) / 1e9
+
+    def head(self, n: int) -> "Trace":
+        return Trace(self.name, self.time_s[:n], self.src[:n], self.dst[:n],
+                     self.payload_bytes[:n], self.n_ports, self.link_gbps)
+
+
+def merge(name: str, traces, n_ports: int, link_gbps: float = 100.0) -> Trace:
+    return Trace(
+        name=name,
+        time_s=np.concatenate([t.time_s for t in traces]),
+        src=np.concatenate([t.src for t in traces]),
+        dst=np.concatenate([t.dst for t in traces]),
+        payload_bytes=np.concatenate([t.payload_bytes for t in traces]),
+        n_ports=n_ports,
+        link_gbps=link_gbps,
+    )
+
+
+def poisson_times(rng: np.random.Generator, rate_pps: float, duration_s: float) -> np.ndarray:
+    n = rng.poisson(rate_pps * duration_s)
+    return np.sort(rng.uniform(0.0, duration_s, size=n))
+
+
+def burst_times(
+    rng: np.random.Generator,
+    burst_rate_ps: float,
+    duration_s: float,
+    burst_len_mean: float,
+    intra_gap_s: float,
+) -> np.ndarray:
+    """Poisson bursts of geometric length with fixed intra-burst spacing."""
+    starts = poisson_times(rng, burst_rate_ps, duration_s)
+    out = []
+    for s in starts:
+        blen = 1 + rng.geometric(1.0 / max(burst_len_mean, 1.0))
+        out.append(s + np.arange(blen) * intra_gap_s)
+    if not out:
+        return np.zeros(0)
+    return np.sort(np.concatenate(out))

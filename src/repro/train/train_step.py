@@ -1,0 +1,106 @@
+"""Training step factory: microbatched grad accumulation, clipping, LR
+schedule, optional compressed cross-pod gradient protocol.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+ready for ``jax.jit`` with the shardings produced by the launcher.  The
+global batch is split into ``microbatches`` chunks accumulated with a
+``lax.scan`` — the live-activation knob that keeps MoE dispatch buffers and
+32k-context activations inside HBM (a DSE-tunable, see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShardingPlan
+from repro.models.moe import MoEOptions
+from .optimizer import Optimizer, clip_by_global_norm
+
+__all__ = ["TrainSpec", "make_train_step", "lr_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    microbatches: int = 1
+    max_grad_norm: float = 1.0
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "wsd"            # wsd (minicpm) | cosine | const
+    moe_opts: Optional[MoEOptions] = None
+    compress_pod_grads: bool = False  # int8 cross-pod gradient protocol
+    shard_grads: bool = False         # constrain grads to param shardings
+                                      # (reduce-scatter instead of all-reduce)
+
+
+def lr_schedule(spec: TrainSpec, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(spec.warmup_steps, 1), 1.0)
+    if spec.schedule == "cosine":
+        frac = jnp.clip(s / spec.total_steps, 0.0, 1.0)
+        base = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif spec.schedule == "wsd":                      # warmup-stable-decay
+        decay_start = 0.9 * spec.total_steps
+        frac = jnp.clip((s - decay_start) / (0.1 * spec.total_steps), 0.0, 1.0)
+        base = 1.0 - frac * (1.0 - 0.1)
+    else:
+        base = jnp.ones(())
+    return spec.lr * warm * base
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    plan: ShardingPlan,
+    mesh,
+    opt: Optimizer,
+    spec: TrainSpec = TrainSpec(),
+    param_shardings=None,
+) -> Callable:
+    def loss_for(params, mb):
+        return T.loss_fn(params, cfg, plan, mesh, mb, moe_opts=spec.moe_opts)
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+    if spec.compress_pod_grads and "pod" in mesh.axis_names:
+        from repro.comm.protocols import wrap_grad_fn_with_pod_protocol
+        grad_fn = wrap_grad_fn_with_pod_protocol(grad_fn, mesh, payload="int8")
+
+    def train_step(params, opt_state, batch, step):
+        nmb = spec.microbatches
+        if nmb > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(nmb, b // nmb, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / nmb, g_acc, g)
+                return (g_acc, l_acc + loss / nmb), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (g0, jnp.zeros(())), mbs)
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if spec.shard_grads and param_shardings is not None:
+            # tell GSPMD gradients are consumed sharded: the cross-device
+            # reduction lowers to reduce-scatter instead of all-reduce+slice
+            grads = jax.lax.with_sharding_constraint(grads, param_shardings)
+        grads, gnorm = clip_by_global_norm(grads, spec.max_grad_norm)
+        lr = lr_schedule(spec, step)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        metrics = dict(metrics)
+        metrics.update({"grad_norm": gnorm, "lr": lr})
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,182 @@
+"""Model zoo: 10-arch smoke, MoE fabric invariants, decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_names, get_config, get_smoke, shapes_for
+from repro.data import make_batch_for_shape
+from repro.models import SINGLE_POD_PLAN, MoEOptions
+from repro.models import transformer as T
+from repro.models.moe import apply_moe, init_moe
+
+PLAN = SINGLE_POD_PLAN
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend == "tokens":
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    else:
+        batch["embeddings"] = jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)),
+                                          jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", all_arch_names())
+def test_smoke_forward_grad_decode(name, mesh11):
+    """REQUIRED smoke: reduced config, one forward/train step, shapes + no NaN."""
+    cfg = get_smoke(name)
+    params, specs = T.init_params(jax.random.PRNGKey(0), cfg, PLAN)
+    batch = _batch(cfg, np.random.default_rng(0))
+    logits, aux = T.forward(params, cfg, PLAN, mesh11, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    loss, metrics = T.loss_fn(params, cfg, PLAN, mesh11, batch)
+    assert jnp.isfinite(loss) and 3.0 < float(loss) < 12.0
+    g = jax.grad(lambda p: T.loss_fn(p, cfg, PLAN, mesh11, batch)[0])(params)
+    leaves = jax.tree.leaves(g)
+    assert all(bool(jnp.isfinite(l.astype(jnp.float32)).all()) for l in leaves)
+    assert any(float(jnp.abs(l.astype(jnp.float32)).max()) > 0 for l in leaves)
+    state, _ = T.init_decode_state(cfg, PLAN, B, 128)
+    tok = batch.get("tokens")
+    inp = tok[:, :1] if tok is not None else batch["embeddings"][:, :1]
+    state, logits1 = T.decode_step(params, cfg, PLAN, mesh11, state, inp)
+    assert logits1.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits1.astype(jnp.float32)).all())
+    assert int(state["pos"]) == 1
+
+
+@pytest.mark.parametrize("name", ["llama3.2-1b", "mamba2-780m", "hymba-1.5b"])
+def test_prefill_matches_forward_last_token(name, mesh11):
+    """prefill() last-token logits == forward() logits at the last position."""
+    cfg = dataclasses.replace(get_smoke(name), remat="none")
+    params, _ = T.init_params(jax.random.PRNGKey(0), cfg, PLAN)
+    batch = _batch(cfg, np.random.default_rng(1))
+    logits_all, _ = T.forward(params, cfg, PLAN, mesh11, batch,
+                              window=cfg.sliding_window)
+    logits_last, state = T.prefill(params, cfg, PLAN, mesh11, batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_last.astype(jnp.float32)),
+        np.asarray(logits_all[:, -1].astype(jnp.float32)), atol=2e-2, rtol=2e-2)
+
+
+def test_decode_matches_forward_teacher_forcing(mesh11):
+    """Running decode_step over a short prompt reproduces forward() logits."""
+    cfg = dataclasses.replace(get_smoke("llama3.2-1b"), remat="none")
+    params, _ = T.init_params(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, 8)), jnp.int32)
+    logits_fwd, _ = T.forward(params, cfg, PLAN, mesh11, {"tokens": toks})
+    state, _ = T.init_decode_state(cfg, PLAN, B, 16)
+    outs = []
+    for t in range(8):
+        state, lg = T.decode_step(params, cfg, PLAN, mesh11, state, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec.astype(jnp.float32)),
+                               np.asarray(logits_fwd.astype(jnp.float32)),
+                               atol=3e-2, rtol=3e-2)
+
+
+# -------------------------------------------------------------- MoE fabric
+
+def _moe_cfg(**kw):
+    base = dict(name="m", family="moe", n_layers=1, d_model=128, n_heads=4,
+                n_kv_heads=2, d_ff=256, vocab=512, moe_experts=8, moe_topk=2)
+    base.update(kw)
+    from repro.models.config import ModelConfig
+    return ModelConfig(**base)
+
+
+def test_moe_capacity_factor_controls_drops(mesh11):
+    cfg = _moe_cfg()
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, PLAN)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 128), jnp.bfloat16)
+    drops = []
+    for cf in (0.5, 1.0, 2.0):
+        _, aux = apply_moe(params, cfg, PLAN, mesh11, x, MoEOptions(capacity_factor=cf))
+        drops.append(float(aux["drop_frac"]))
+    assert drops[0] >= drops[1] >= drops[2]
+    assert drops[2] <= 0.05
+
+
+def test_moe_int8_payload_close_to_bf16(mesh11):
+    cfg = _moe_cfg()
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, PLAN)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 128), jnp.bfloat16)
+    y1, _ = apply_moe(params, cfg, PLAN, mesh11, x, MoEOptions())
+    y2, _ = apply_moe(params, cfg, PLAN, mesh11, x, MoEOptions(payload="int8"))
+    rel = float(jnp.abs(y1.astype(jnp.float32) - y2.astype(jnp.float32)).max())
+    scale = float(jnp.abs(y1.astype(jnp.float32)).max())
+    assert rel < 0.1 * max(scale, 1e-3)
+
+
+def test_moe_chunked_schedule_is_equivalent(mesh11):
+    cfg = _moe_cfg()
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, PLAN)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 128), jnp.bfloat16)
+    y1, _ = apply_moe(params, cfg, PLAN, mesh11, x, MoEOptions(a2a_chunks=1))
+    y2, _ = apply_moe(params, cfg, PLAN, mesh11, x, MoEOptions(a2a_chunks=4))
+    np.testing.assert_allclose(np.asarray(y1.astype(jnp.float32)),
+                               np.asarray(y2.astype(jnp.float32)), atol=1e-2)
+
+
+def test_moe_hash_router_is_deterministic_and_balanced(mesh11):
+    cfg = _moe_cfg(router="hash")
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, PLAN)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 128), jnp.bfloat16)
+    _, a1 = apply_moe(params, cfg, PLAN, mesh11, x, MoEOptions(router="hash"))
+    _, a2 = apply_moe(params, cfg, PLAN, mesh11, x, MoEOptions(router="hash"))
+    np.testing.assert_array_equal(np.asarray(a1["expert_load"]),
+                                  np.asarray(a2["expert_load"]))
+    load = np.asarray(a1["expert_load"], float)
+    assert load.sum() == 4 * 64 * cfg.moe_topk     # every token routed k times
+    assert load.max() < load.sum() * 0.6           # no total collapse
+
+
+def test_moe_grads_flow_through_fabric(mesh11):
+    cfg = _moe_cfg()
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, PLAN)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 128), jnp.bfloat16)
+
+    def loss(p):
+        y, _ = apply_moe(p, cfg, PLAN, mesh11, x)
+        return jnp.mean(y.astype(jnp.float32) ** 2)
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.linalg.norm(g["w1"].astype(jnp.float32))) > 0
+    assert float(jnp.linalg.norm(g["router"])) > 0
+
+
+# ------------------------------------------------------------ M-RoPE / window
+
+def test_mrope_distinct_positions_change_logits(mesh11):
+    cfg = get_smoke("qwen2-vl-72b")
+    params, _ = T.init_params(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(3)
+    emb = jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)), jnp.bfloat16)
+    base = np.broadcast_to(np.arange(S, dtype=np.int32)[None], (B, S))
+    p_text = jnp.asarray(np.stack([base, base, base], 1))
+    grid = np.stack([base, base // 8, base % 8], 1).astype(np.int32)
+    p_img = jnp.asarray(grid)
+    l1, _ = T.forward(params, cfg, PLAN, mesh11, {"embeddings": emb, "positions3": p_text})
+    l2, _ = T.forward(params, cfg, PLAN, mesh11, {"embeddings": emb, "positions3": p_img})
+    assert float(jnp.abs(l1.astype(jnp.float32) - l2.astype(jnp.float32)).max()) > 1e-3
+
+
+def test_sliding_window_limits_attention(mesh11):
+    from repro.models.attention import plain_attention
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 32, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 32, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 32, 16))
+    full = plain_attention(q, k, v, causal=True)
+    win = plain_attention(q, k, v, causal=True, window=4)
+    assert float(jnp.abs(full - win).max()) > 1e-4  # genuinely different
+    # early tokens (pos < window) identical
+    np.testing.assert_allclose(np.asarray(full[:, :, :4]), np.asarray(win[:, :, :4]),
+                               atol=1e-5)

@@ -1,0 +1,143 @@
+"""Simulation stack + Algorithm-1 DSE: fidelity, sizing, Pareto consistency."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ArchRequest, ResourceBudget, SLA, SchedulerKind,
+                        SwitchArch, ForwardTableKind, VOQKind, analyze, bind,
+                        compressed_protocol, depth_for_drop_rate,
+                        ethernet_ipv4_udp, pareto_front, is_dominated)
+from repro.sim import (ALVEO_U45N, annotate, estimate_quick, optimize_switch,
+                       run_netsim, run_surrogate, synthesize)
+from repro.traces import hft, underwater, uniform
+
+
+def _arch(**kw):
+    base = dict(n_ports=8, bus_bits=256, fwd=ForwardTableKind.FULL_LOOKUP,
+                voq=VOQKind.NXN, sched=SchedulerKind.RR, voq_depth=64, addr_bits=4)
+    base.update(kw)
+    return SwitchArch(**base)
+
+
+# ------------------------------------------------------------------ features
+
+def test_features_burstiness_orders_traces():
+    f_hft = analyze(hft(seed=0))
+    f_uni = analyze(uniform(seed=0))
+    assert f_hft.i_burst > f_uni.i_burst
+    assert f_hft.s_min == 24
+
+
+# ------------------------------------------------------------------ resources
+
+def test_resource_model_matches_table1_within_tolerance():
+    from repro.sim.resources import TABLE1_SPAC_ROWS
+    eth = bind(ethernet_ipv4_udp(), flit_bits=512)
+    cmp16 = bind(compressed_protocol(), flit_bits=256)
+    for (arch, hdr), lut, ff, bram, fmax, lat in TABLE1_SPAC_ROWS:
+        r = synthesize(arch, eth if hdr > 100 else cmp16)
+        assert abs(r.luts / 1e3 / lut - 1) < 0.25
+        assert abs(r.brams / bram - 1) < 0.25
+        assert abs(r.fmax_mhz / fmax - 1) < 0.10
+        assert abs(r.latency_ns / lat - 1) < 0.20
+
+
+def test_quick_estimate_close_to_synthesize():
+    bound = bind(compressed_protocol(), flit_bits=256)
+    a = _arch(sched=SchedulerKind.ISLIP)
+    q, s = estimate_quick(a, bound), synthesize(a, bound)
+    assert abs(q.luts / s.luts - 1) < 0.25
+    assert abs(q.fmax_mhz / s.fmax_mhz - 1) < 0.15
+
+
+# ------------------------------------------------------------------ surrogate
+
+def test_surrogate_latency_increases_with_load():
+    bound = bind(compressed_protocol(addr_bits=4), flit_bits=256)
+    a = _arch()
+    lo = run_surrogate(a, bound, uniform(seed=1, load=0.1))
+    hi = run_surrogate(a, bound, uniform(seed=1, load=0.9))
+    assert hi.p(99) > lo.p(99)
+    assert hi.q_occupancy.max() >= lo.q_occupancy.max()
+
+
+def test_surrogate_vs_cycle_sim_fidelity():
+    """Fig.6-style: back-annotated surrogate p50 within 2x of the cycle sim."""
+    from repro.switch import simulate
+    bound = bind(compressed_protocol(addr_bits=4), flit_bits=256)
+    a = _arch(n_ports=4, sched=SchedulerKind.ISLIP)
+    tr = uniform(seed=2, n_ports=4, duration_s=60e-6, load=0.4, payload=256)
+    hw = annotate(a, bound, source="cycle_sim")
+    sur = run_surrogate(a, bound, tr, hw=hw)
+    cyc = simulate(a, bound, tr, fclk_hz=hw.fclk_hz)
+    assert 0.5 < sur.p(50) / cyc.p(50) < 2.0
+
+
+def test_netsim_retransmission_recovers_drops():
+    from repro.core import Field
+    from repro.sim import NetSimConfig
+    proto = compressed_protocol(addr_bits=4, seq_bits=8)
+    bound = bind(proto, flit_bits=256)
+    tr = uniform(seed=0, n_ports=4, duration_s=30e-6, load=0.95, payload=512)
+    a = _arch(n_ports=4, voq_depth=2)
+    base = run_netsim(a, bound, tr, back_annotation=False)
+    retx = run_netsim(a, bound, tr, back_annotation=False,
+                      cfg=NetSimConfig(retransmit=True, rto_s=5e-6))
+    assert retx.drop_rate <= base.drop_rate
+
+
+# ------------------------------------------------------------------ DSE
+
+@given(st.lists(st.integers(0, 200), min_size=10, max_size=300),
+       st.floats(1e-4, 0.2))
+@settings(max_examples=40, deadline=None)
+def test_depth_for_drop_rate_property(occ, eps):
+    d = depth_for_drop_rate(np.asarray(occ, float), eps)
+    frac_over = float(np.mean(np.asarray(occ) > d))
+    assert frac_over <= eps + 1e-9
+    assert d >= 1
+
+
+def test_pareto_front_non_dominated():
+    pts = [(1, 5), (2, 2), (5, 1), (3, 3), (6, 6)]
+    front = pareto_front(pts, key=lambda p: p)
+    assert (3, 3) not in front and (6, 6) not in front
+    for a in front:
+        assert not any(is_dominated(a, b) for b in front if b != a)
+
+
+def test_dse_hft_selects_low_latency_architecture():
+    """Table-II HFT row: FullLookup + RR at a narrow bus."""
+    tr = hft(seed=0)
+    bound = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
+    res, prob = optimize_switch(
+        ArchRequest(n_ports=8, addr_bits=4), bound, tr,
+        sla=SLA(p99_latency_ns=5000, drop_rate=1e-3), back_annotation=False)
+    assert res.best is not None
+    assert res.best.fwd is ForwardTableKind.FULL_LOOKUP
+    assert res.best.sched is SchedulerKind.RR
+    assert res.best_verify.drop_rate <= 1.5e-3
+
+
+def test_dse_stage1_prunes_infeasible_timing():
+    """Tiny packets on a fast link must eliminate slow/wide configs."""
+    tr = hft(seed=0, link_gbps=100.0)     # 24B @ 100G: arrival every ~5ns
+    bound = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
+    res, prob = optimize_switch(ArchRequest(n_ports=8, addr_bits=4), bound, tr,
+                                back_annotation=False)
+    assert res.logs[0].survived < res.logs[0].considered
+
+
+def test_dse_result_on_own_pareto_front():
+    tr = underwater(seed=0)
+    bound = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
+    res, prob = optimize_switch(ArchRequest(n_ports=8, addr_bits=4), bound, tr,
+                                sla=SLA(p99_latency_ns=1e5, drop_rate=1e-3),
+                                back_annotation=False)
+    assert res.best is not None
+    objs = [prob.objectives(a, v) for a, v, _, ok in res.evaluated if ok]
+    best_obj = prob.objectives(res.best, res.best_verify)
+    assert not any(is_dominated(best_obj, o) for o in objs if o != best_obj)
