@@ -1,0 +1,77 @@
+"""Stage-2 DSE fan-out throughput: batched JAX engine vs the serial loop.
+
+Measures candidates/sec over a 64-candidate sweep on the hft trace, checks
+the >= 5x acceptance bar, and cross-checks that ``run_dse`` produces the
+identical Pareto front through either stage-2 path.
+
+    PYTHONPATH=src python -m benchmarks.dse_throughput
+"""
+
+import time
+
+from .common import emit
+
+
+def run():
+    from repro.core import (ArchRequest, ResourceBudget, SLA, bind,
+                            compressed_protocol, enumerate_candidates, run_dse)
+    from repro.core.dse import DSEProblem
+    from repro.sim import run_surrogate, run_surrogate_batched
+    from repro.sim.resources import ALVEO_U45N
+    from repro.sim.switch_problem import SwitchDSEProblem
+    from repro.traces import hft
+
+    bound = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
+    tr = hft(seed=0)
+    cands = (enumerate_candidates(ArchRequest(n_ports=8, addr_bits=4))
+             + enumerate_candidates(ArchRequest(n_ports=8, addr_bits=8)))[:64]
+    assert len(cands) == 64
+
+    # warm both paths (jit compile, η/synthesis caches) before timing
+    run_surrogate_batched(cands, bound, tr, back_annotation=False)
+    run_surrogate(cands[0], bound, tr, back_annotation=False)
+
+    t0 = time.perf_counter()
+    batch = run_surrogate_batched(cands, bound, tr, back_annotation=False)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    serial = [run_surrogate(a, bound, tr, back_annotation=False) for a in cands]
+    t_serial = time.perf_counter() - t0
+
+    cps_b = len(cands) / t_batched
+    cps_s = len(cands) / t_serial
+    speedup = t_serial / t_batched
+    emit("dse_throughput/batched", t_batched * 1e6 / len(cands),
+         f"{cps_b:.0f} cand/s over {len(tr)} pkts")
+    emit("dse_throughput/serial", t_serial * 1e6 / len(cands),
+         f"{cps_s:.0f} cand/s")
+    emit("dse_throughput/speedup", 0.0,
+         f"{speedup:.1f}x ({'PASS' if speedup >= 5.0 else 'FAIL'} >=5x bar)")
+
+    # parity spot check on the measured runs
+    import numpy as np
+    exact = all(np.array_equal(rb.q_occupancy, rs.q_occupancy)
+                for rb, rs in zip(batch.results(), serial))
+    emit("dse_throughput/occupancy_exact", 0.0, str(exact))
+
+    # full-pipeline consistency: identical Pareto front either way
+    class SerialProblem(SwitchDSEProblem):
+        surrogate_batch = DSEProblem.surrogate_batch
+
+    sla = SLA(p99_latency_ns=5000, drop_rate=1e-3)
+    budget = ResourceBudget(dict(ALVEO_U45N))
+    req = ArchRequest(n_ports=8, addr_bits=4)
+    res_b = run_dse(SwitchDSEProblem(req, bound, tr, back_annotation=False),
+                    sla, budget)
+    res_s = run_dse(SerialProblem(req, bound, tr, back_annotation=False),
+                    sla, budget)
+    same = (sorted(a.short() for a, _ in res_b.pareto)
+            == sorted(a.short() for a, _ in res_s.pareto))
+    emit("dse_throughput/pareto_identical", 0.0, str(same))
+    return {"speedup": speedup, "pareto_identical": same,
+            "occupancy_exact": exact}
+
+
+if __name__ == "__main__":
+    run()

@@ -12,8 +12,9 @@ import sys
 import time
 import traceback
 
-from . import (fig1_sensitivity, fig6_fidelity, fig7_dse_pareto, fig8_scaling,
-               moe_fabric, roofline_table, table1_resources, table2_adaptation)
+from . import (dse_throughput, fig1_sensitivity, fig6_fidelity, fig7_dse_pareto,
+               fig8_scaling, moe_fabric, roofline_table, table1_resources,
+               table2_adaptation)
 
 SUITES = {
     "table1": table1_resources.run,
@@ -24,6 +25,7 @@ SUITES = {
     "table2": table2_adaptation.run,
     "roofline": roofline_table.run,
     "moe_fabric": moe_fabric.run,
+    "dse_throughput": dse_throughput.run,
 }
 
 

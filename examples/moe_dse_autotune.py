@@ -15,6 +15,8 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
+
+from repro.launch.mesh import compat_make_mesh
 import numpy as np
 
 from repro.comm import autotune_moe
@@ -23,8 +25,7 @@ from repro.models.moe import apply_moe, init_moe
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     cfg = ModelConfig(name="moe-demo", family="moe", n_layers=1, d_model=512,
                       n_heads=8, n_kv_heads=4, d_ff=1024, vocab=1000,
                       moe_experts=32, moe_topk=4)

@@ -10,6 +10,8 @@ import time
 sys.path.insert(0, "src")
 
 import jax
+
+from repro.launch.mesh import compat_make_mesh
 import numpy as np
 
 from repro.configs import get_smoke
@@ -26,8 +28,7 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     cfg = get_smoke(args.arch)
     plan = SINGLE_POD_PLAN
     params, _ = T.init_params(jax.random.PRNGKey(0), cfg, plan)

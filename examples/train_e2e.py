@@ -17,6 +17,8 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro.launch.mesh import compat_make_mesh
+
 from repro.data import DataConfig, SyntheticLM
 from repro.models import SINGLE_POD_PLAN, ModelConfig
 from repro.models import transformer as T
@@ -40,8 +42,7 @@ def main():
                     help="step at which to kill the 'node' (default steps//2)")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     cfg = model_100m()
     plan = SINGLE_POD_PLAN
     print(f"model: {cfg.name} — {cfg.param_count()/1e6:.0f}M params")

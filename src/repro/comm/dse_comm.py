@@ -99,25 +99,36 @@ class CommDSEProblem(DSEProblem):
         slot = self.cfg.d_model * (1 if c.payload == "int8" else 2)
         return 2.0 * self.cfg.moe_experts * max(cap, 1) * slot   # send+recv
 
-    def _a2a_bytes(self, c: CommSpec) -> float:
-        """Wire bytes per step per device (both directions, all µbatches)."""
-        slots = self.tokens_per_device * self.cfg.moe_topk * c.capacity_factor
-        slot = self.cfg.d_model * (1 if c.payload == "int8" else 2)
+    def _a2a_bytes_batch(self, cs: List[CommSpec]) -> np.ndarray:
+        """Wire bytes per step per device (both directions, all µbatches) for
+        a whole candidate batch — the single home of the formula; the scalar
+        helper delegates here so the two can never drift."""
+        cf = np.array([c.capacity_factor for c in cs], np.float64)
+        slot = self.cfg.d_model * np.array(
+            [1 if c.payload == "int8" else 2 for c in cs], np.float64)
+        slots = self.tokens_per_device * self.cfg.moe_topk * cf
         frac_remote = (self.tp_size - 1) / self.tp_size
         return 2.0 * slots * slot * frac_remote
 
-    def _step_time(self, c: CommSpec) -> float:
-        """Analytic fabric time: max(compute, wire) per chunk + issue overhead."""
-        slots = self.tokens_per_device * self.cfg.moe_topk * c.capacity_factor
+    def _a2a_bytes(self, c: CommSpec) -> float:
+        return float(self._a2a_bytes_batch([c])[0])
+
+    def _step_time_batch(self, cs: List[CommSpec]) -> np.ndarray:
+        """Analytic fabric time: max(compute, wire) per chunk + issue cost."""
+        cf = np.array([c.capacity_factor for c in cs], np.float64)
+        chunks = np.maximum(np.array([c.a2a_chunks for c in cs]), 1)
+        slots = self.tokens_per_device * self.cfg.moe_topk * cf
         flops = 3 * 2 * slots * self.cfg.d_model * self.cfg.d_ff
         t_compute = flops / self.hw["peak_flops_bf16"]
-        t_wire = self._a2a_bytes(c) / self.hw["ici_link_gbps"]
-        n_chunks = max(c.a2a_chunks, 1)
-        t_issue = 5e-6 * n_chunks                 # per-collective issue cost
-        if n_chunks > 1:                          # pipelined: overlap comm/compute
-            per = max(t_compute, t_wire) / n_chunks
-            return per * (n_chunks + 1) + t_issue
-        return t_compute + t_wire + t_issue
+        t_wire = self._a2a_bytes_batch(cs) / self.hw["ici_link_gbps"]
+        t_issue = 5e-6 * chunks                   # per-collective issue cost
+        per = np.maximum(t_compute, t_wire) / chunks
+        return np.where(chunks > 1,               # pipelined: overlap comm/compute
+                        per * (chunks + 1) + t_issue,
+                        t_compute + t_wire + t_issue)
+
+    def _step_time(self, c: CommSpec) -> float:
+        return float(self._step_time_batch([c])[0])
 
     # ------------------------------------------------------------- Alg. 1
     def candidates(self) -> List[CommSpec]:
@@ -138,15 +149,26 @@ class CommDSEProblem(DSEProblem):
 
     def surrogate(self, c: CommSpec) -> SurrogateResult:
         """Stage 2: infinite buffers — per-expert occupancy from the routing
-        trace; latency distribution from the analytic fabric model."""
-        mean_load = self.loads.mean()
-        occupancy = self.loads.reshape(-1) / max(mean_load, 1e-9)   # ×mean units
-        t = self._step_time(c)
-        return SurrogateResult(
-            q_occupancy=occupancy,
-            latency_ns=np.full(16, t * 1e9),
-            throughput_gbps=self._a2a_bytes(c) * 8 / max(t, 1e-12) / 1e9,
-            meta={"step_s": t})
+        trace; latency distribution from the analytic fabric model.  One body
+        with the batch path so the two can never drift."""
+        return self.surrogate_batch([c])[0]
+
+    def surrogate_batch(self, cands: List[CommSpec]) -> List[SurrogateResult]:
+        """Stage-2 fan-out: the fabric model is closed-form, so the whole
+        candidate batch reduces to one pass over the vectorised formulas."""
+        if not cands:
+            return []
+        t = self._step_time_batch(cands)
+        a2a = self._a2a_bytes_batch(cands)
+        occupancy = self.loads.reshape(-1) / max(self.loads.mean(), 1e-9)
+        return [
+            SurrogateResult(
+                q_occupancy=occupancy.copy(),   # no aliasing across candidates
+                latency_ns=np.full(16, tb * 1e9),
+                throughput_gbps=float(ab * 8 / max(tb, 1e-12) / 1e9),
+                meta={"step_s": float(tb), "batched": True})
+            for tb, ab in zip(t, a2a)
+        ]
 
     def size_buffers(self, c: CommSpec, occupancy: np.ndarray, eps: float) -> CommSpec:
         """Stage 3: capacity factor = (1-ε) quantile of normalised expert load,

@@ -1,0 +1,45 @@
+"""JAX version-compatibility shims.
+
+The codebase targets current JAX APIs; these wrappers keep it running on the
+0.4.x line too.  Every use of a recent-API entry point routes through here
+(meshes route through ``repro.launch.mesh.compat_make_mesh``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["has_partial_manual_shard_map", "shard_map"]
+
+
+def has_partial_manual_shard_map() -> bool:
+    """True when shard_map supports being manual over a subset of mesh axes.
+
+    The 0.4.x line nominally has ``auto=`` but its SPMD partitioner CHECK-
+    fails on manual-subgroup collectives (all_gather inside the compressed
+    pod protocol), so the capability tracks the new top-level API."""
+    return hasattr(jax, "shard_map")
+
+
+def shard_map(f, mesh, *, in_specs, out_specs, axis_names=None, check=False):
+    """``jax.shard_map`` across versions.
+
+    New API: top-level ``jax.shard_map(..., check_vma=, axis_names=)``.
+    Old API (jax<=0.4.x): ``jax.experimental.shard_map.shard_map`` with
+    ``check_rep=`` and partial manualness via ``auto=`` (the complement of
+    ``axis_names``).  Caveat on the old path: inside a partially-manual
+    region, ``jax.lax.axis_index`` over a manual axis lowers to a
+    ``PartitionId`` op that SPMD partitioning rejects — collectives
+    (pmean/psum/all_gather) are fine; derive positions from sharded data
+    instead of axis_index there.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"axis_names": axis_names} if axis_names is not None else {}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if axis_names is not None and set(axis_names) != set(mesh.axis_names):
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check, **kw)

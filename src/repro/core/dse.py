@@ -98,6 +98,18 @@ class DSEProblem:
         """Infinite-buffer statistical simulation (stage 2)."""
         raise NotImplementedError
 
+    def surrogate_batch(self, cands: Sequence[Any]) -> List[SurrogateResult]:
+        """Stage-2 fan-out hook: evaluate a whole candidate batch at once.
+
+        Results must be index-aligned with ``cands``.  The default is the
+        serial fallback (one ``surrogate`` call per candidate); problems with
+        a vectorised surrogate override this — e.g. the switch problem fans
+        candidates out through the batched JAX engine
+        (``repro.sim.batched_surrogate``) so thousands of templates cost one
+        jitted scan instead of thousands of Python loops.  Stage 3 consumes
+        the returned occupancy samples unchanged."""
+        return [self.surrogate(c) for c in cands]
+
     def size_buffers(self, cand, q_occupancy: np.ndarray, eps: float):
         """Map occupancy histogram to a sized candidate (stage 3)."""
         raise NotImplementedError
@@ -185,9 +197,15 @@ def run_dse(
         print(logs[-1])
 
     # ------------------------------------------ Stage 2: coarse-grained profiling
+    # fan the whole surviving batch out through the problem's surrogate hook
+    # (vectorised where the problem provides it, serial loop otherwise)
+    srs = problem.surrogate_batch(active)
+    if len(srs) != len(active):
+        raise ValueError(
+            f"surrogate_batch returned {len(srs)} results for {len(active)} "
+            "candidates; results must be index-aligned")
     valid: List[Tuple[Any, SurrogateResult]] = []
-    for a in active:
-        sr = problem.surrogate(a)
+    for a, sr in zip(active, srs):
         if sr.p(99) <= sla.p99_latency_ns and sr.throughput_gbps >= sla.min_throughput_gbps:
             valid.append((a, sr))
     logs.append(StageLog("stage2-surrogate", len(active), len(valid)))

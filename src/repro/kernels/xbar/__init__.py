@@ -1,0 +1,3 @@
+from .ops import xbar_contend
+
+__all__ = ["xbar_contend"]

@@ -1,0 +1,54 @@
+"""Public batched crossbar-contention op.
+
+Dispatch policy: float64 inputs take the absolute-time scan (fastest, and
+bit-identical to the serial surrogate's recurrence — it returns *absolute*
+departure times so ulp-exact occupancy comparisons hold downstream);
+float32 inputs take the slack-form scan whose carries never hold absolute
+timestamps, so precision survives long traces — that is also the form the
+Pallas kernel implements for TPU deployment (validated in interpret mode on
+CPU).  The f32 paths return departure *offsets* (dep - arrival)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import xbar_contend_padded
+from .ref import xbar_contend_abs_ref, xbar_contend_slack_ref
+
+LANES = 128
+
+
+def xbar_contend(t, dt, src, dst, svc, *, n_ports: int, use_pallas: bool = False,
+                 block_b: int = 8, interpret: bool = True,
+                 absolute: bool = None):
+    """t/dt/src/dst [m] shared trace, svc [B, m] -> [B, m] departure times
+    (absolute on the float64 path, arrival-relative offsets on float32).
+
+    Pass ``absolute=True`` to *require* absolute-time semantics: if x64 is
+    disabled JAX silently downcasts float64 inputs and the dtype dispatch
+    would quietly hand back offsets instead — this raises there."""
+    is_f64 = jnp.asarray(svc).dtype == jnp.float64
+    if absolute is None:
+        absolute = is_f64 and not use_pallas
+    elif absolute and (use_pallas or not is_f64):
+        raise ValueError(
+            "absolute departure times need the float64 scan (enable jax x64 "
+            f"and use_pallas=False); got dtype {jnp.asarray(svc).dtype}")
+    if use_pallas:
+        b, m = svc.shape
+        n_pad = -(-n_ports // LANES) * LANES
+        pad_b = (-b) % block_b
+        svc32 = jnp.asarray(svc, jnp.float32)
+        if pad_b:
+            svc32 = jnp.pad(svc32, ((0, pad_b), (0, 0)))
+        dep = xbar_contend_padded(
+            jnp.asarray(dt, jnp.float32)[None, :],
+            jnp.asarray(src, jnp.int32)[None, :],
+            jnp.asarray(dst, jnp.int32)[None, :],
+            svc32,
+            n_pad=n_pad, block_b=block_b, interpret=interpret,
+        )
+        return dep[:b]
+    if absolute:
+        return xbar_contend_abs_ref(t, src, dst, svc, n_ports=n_ports)
+    return xbar_contend_slack_ref(dt, src, dst, svc, n_ports=n_ports)

@@ -110,6 +110,8 @@ def _extrapolated_cost(cfg, shape, plan, mesh, opt, moe_opts,
                              train_spec_overrides)
         compiled = lowered.compile()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):      # jax<=0.4.x: one dict per program
+            cost = cost[0] if cost else {}
         coll = collective_bytes(compiled.as_text())
         pts.append((float(cost.get("flops", 0.0)),
                     float(cost.get("bytes accessed", 0.0)), coll))

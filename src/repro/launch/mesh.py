@@ -5,21 +5,31 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "plan_for_mesh", "N_DEVICES"]
+__all__ = ["compat_make_mesh", "make_production_mesh", "plan_for_mesh", "N_DEVICES"]
 
 N_DEVICES = {"single": 256, "multi": 512}
+
+
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types across JAX versions.
+
+    ``axis_types=`` / ``jax.sharding.AxisType`` only exist on newer releases;
+    older ones (0.4.x) behave as Auto everywhere, which is what we want."""
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1):
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def plan_for_mesh(mesh):

@@ -1,13 +1,14 @@
 """Multi-level simulation stack (paper SS IV-A): surrogate, netsim, resources."""
 from .backannotate import HardwareParams, analytic_eta, annotate
+from .batched_surrogate import BatchedSurrogateResult, run_surrogate_batched
 from .netsim import NetSimConfig, run_netsim
 from .resources import ALVEO_U45N, ResourceReport, estimate_quick, synthesize
 from .surrogate import run_surrogate
 from .switch_problem import SwitchDSEProblem, align_depth_to_bram, optimize_switch
 
 __all__ = [
-    "ALVEO_U45N", "HardwareParams", "NetSimConfig", "ResourceReport",
-    "SwitchDSEProblem", "align_depth_to_bram", "analytic_eta", "annotate",
-    "estimate_quick", "optimize_switch", "run_netsim", "run_surrogate",
-    "synthesize",
+    "ALVEO_U45N", "BatchedSurrogateResult", "HardwareParams", "NetSimConfig",
+    "ResourceReport", "SwitchDSEProblem", "align_depth_to_bram", "analytic_eta",
+    "annotate", "estimate_quick", "optimize_switch", "run_netsim",
+    "run_surrogate", "run_surrogate_batched", "synthesize",
 ]

@@ -25,6 +25,7 @@ from repro.core.dse import (
 )
 from repro.core.features import TraceFeatures, analyze
 from .backannotate import annotate
+from .batched_surrogate import run_surrogate_batched
 from .netsim import NetSimConfig, run_netsim
 from .resources import ALVEO_U45N, BRAM_BITS, synthesize
 from .surrogate import run_surrogate
@@ -73,6 +74,17 @@ class SwitchDSEProblem(DSEProblem):
         return run_surrogate(a, self.bound, self.trace,
                              back_annotation=self.back_annotation,
                              i_burst=self.features.i_burst)
+
+    def surrogate_batch(self, archs) -> List[SurrogateResult]:
+        """Fan stage 2 out through the batched JAX engine: one jitted
+        contention scan over the shared trace with all candidate parameters
+        (bus width, η, pipeline, stalls) as batch axes."""
+        if not archs:
+            return []
+        return run_surrogate_batched(
+            list(archs), self.bound, self.trace,
+            back_annotation=self.back_annotation,
+            i_burst=self.features.i_burst).results()
 
     # ------------------------------------------------------------- stage 3
     def size_buffers(self, a: SwitchArch, q_occupancy: np.ndarray, eps: float) -> Optional[SwitchArch]:

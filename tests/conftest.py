@@ -9,10 +9,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
 
+from repro.launch.mesh import compat_make_mesh  # noqa: E402
+
 import pytest  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))

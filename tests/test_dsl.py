@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dep, skips cleanly
 
 from repro.core import (ETHERNET_HEADER_BYTES, Field, Protocol, SemanticBinding,
                         bind, compressed_protocol, ethernet_ipv4_udp)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dep, skips cleanly
 
 from repro.core import ethernet_ipv4_udp, compressed_protocol, Field, Protocol
 

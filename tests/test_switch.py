@@ -4,7 +4,7 @@ end-to-end delivery."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dep, skips cleanly
 
 from repro.core import (SchedulerKind, SwitchArch, ForwardTableKind, VOQKind,
                         bind, compressed_protocol)
