@@ -1,2 +1,5 @@
-import os, sys
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+"""Paper table/figure reproductions + throughput benchmarks.
+
+Runs against the installed ``repro`` package (``pip install -e .``); no
+``sys.path`` games.
+"""

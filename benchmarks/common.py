@@ -1,10 +1,7 @@
 """Shared benchmark helpers: timing + CSV emission."""
 
-import sys
 import time
-from typing import Callable, Optional
-
-sys.path.insert(0, "src")
+from typing import Callable
 
 
 def timed(fn: Callable, *args, repeats: int = 3, **kw):

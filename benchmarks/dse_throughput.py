@@ -1,10 +1,11 @@
 """Stage-2 DSE fan-out throughput: batched JAX engine vs the serial loop.
 
 Measures candidates/sec over a 64-candidate sweep on the hft trace, checks
-the >= 5x acceptance bar, and cross-checks that ``run_dse`` produces the
-identical Pareto front through either stage-2 path.
+the >= 5x acceptance bar, cross-checks that ``run_dse`` produces the
+identical Pareto front through either stage-2 path, and reports aggregate
+campaign-level stage-2 throughput over three registry scenarios.
 
-    PYTHONPATH=src python -m benchmarks.dse_throughput
+    python -m benchmarks.dse_throughput
 """
 
 import time
@@ -69,8 +70,20 @@ def run():
     same = (sorted(a.short() for a, _ in res_b.pareto)
             == sorted(a.short() for a, _ in res_s.pareto))
     emit("dse_throughput/pareto_identical", 0.0, str(same))
+
+    # campaign-level fan-out: every scenario's stage-2 candidates through the
+    # batched engine, aggregate candidates/sec across the whole campaign
+    from repro.api import registry, run_campaign
+    scenarios = [registry[n].override(back_annotation=False)
+                 for n in ("hft", "underwater", "industry")]
+    campaign = run_campaign(scenarios, name="bench")
+    emit("dse_throughput/campaign", campaign.stage2_time_s * 1e6,
+         f"{len(campaign.reports)} scenarios; {campaign.stage2_candidates} "
+         f"stage-2 candidates in {campaign.stage2_batches} batched calls; "
+         f"{campaign.stage2_cands_per_sec:.0f} cand/s aggregate")
     return {"speedup": speedup, "pareto_identical": same,
-            "occupancy_exact": exact}
+            "occupancy_exact": exact,
+            "campaign_cands_per_sec": campaign.stage2_cands_per_sec}
 
 
 if __name__ == "__main__":

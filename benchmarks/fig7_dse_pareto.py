@@ -11,22 +11,32 @@ from .common import emit, timed
 
 
 def run():
-    from repro.core import (ArchRequest, AUTO, ResourceBudget, SLA, analyze, bind,
-                            compressed_protocol, enumerate_candidates,
+    from repro.api import Scenario, ProtocolSpec, TraceSpec, run_scenario
+    from repro.api.scenario import Fidelity
+    from repro.core import (ArchRequest, SLA, enumerate_candidates,
                             pareto_front, is_dominated)
-    from repro.sim import ALVEO_U45N, optimize_switch, run_netsim, synthesize
-    from repro.core.archspec import VOQ_DEPTHS
-    from repro.traces import rl_allreduce
+    from repro.sim import run_netsim, synthesize
 
-    tr = rl_allreduce(seed=0)       # incast bursts
-    bound = bind(compressed_protocol(addr_bits=4, length_bits=12), flit_bits=256)
-    req = ArchRequest(n_ports=8, addr_bits=4)
-    sla = SLA(p99_latency_ns=1e6, drop_rate=1e-2)
+    # the whole DSE experiment as one declarative spec
+    scenario = Scenario(
+        name="fig7_rl_allreduce",
+        protocol=ProtocolSpec(builder="compressed_protocol",
+                              params={"addr_bits": 4, "length_bits": 12}),
+        flit_bits=256,
+        trace=TraceSpec(generator="rl_allreduce", params={"seed": 0}),
+        arch=ArchRequest(n_ports=8, addr_bits=4),
+        sla=SLA(p99_latency_ns=1e6, drop_rate=1e-2),
+        fidelity=Fidelity(back_annotation=False),
+    )
+    # DSE first (also materialises trace + bound for the brute-force sweep)
+    report, us = timed(lambda: run_scenario(scenario), repeats=1)
+    tr, bound = report.problem.trace, report.problem.bound   # incast bursts
+    sla = scenario.sla
 
     from repro.sim import align_depth_to_bram
     # brute force over BRAM-aligned depths (sub-row depths cost a full row)
     points = []
-    for a in enumerate_candidates(req):
+    for a in enumerate_candidates(scenario.arch):
         for d in {align_depth_to_bram(d, a.bus_bits) for d in (1, 64, 256, 1024)}:
             cand = a.with_depth(d)
             v = run_netsim(cand, bound, tr, back_annotation=False)
@@ -37,11 +47,7 @@ def run():
     front = pareto_front(feas, key=lambda cvr: (cvr[1].mean_latency_ns, cvr[2].brams))
     front_objs = [(v.mean_latency_ns, r.brams) for _, v, r in front]
 
-    # DSE
-    (res, prob), us = timed(
-        lambda: optimize_switch(req, bound, tr, sla=sla,
-                                budget=ResourceBudget(dict(ALVEO_U45N)),
-                                back_annotation=False), repeats=1)
+    res = report.result
     assert res.best is not None
     r_best = synthesize(res.best, bound)
     best_obj = (res.best_verify.mean_latency_ns, r_best.brams)

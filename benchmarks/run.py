@@ -4,8 +4,8 @@ microbench and the dry-run roofline table.
 Emits ``name,us_per_call,derived`` CSV rows (derived strings use ';'
 separators so the CSV stays 3 columns).
 
-    PYTHONPATH=src python -m benchmarks.run            # everything
-    PYTHONPATH=src python -m benchmarks.run fig7 table2
+    python -m benchmarks.run            # everything (pip install -e . once)
+    python -m benchmarks.run fig7 table2
 """
 
 import sys

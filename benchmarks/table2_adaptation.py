@@ -2,13 +2,18 @@
 workloads — DSE-selected (protocol + architecture) vs the fixed SPAC-Ethernet
 baseline, hardware-aware simulation with cycle-level back-annotation.
 
+Each workload runs from its registry ``Scenario`` (the Table II recipe lives
+in ``repro.api.registry``), so the benchmark and ``spac run <workload>``
+execute the identical spec.
+
 Paper headline: latency reductions 7.8%–38.4%; underwater saves ~55% LUT /
 ~53% BRAM at a 4 B wire size.
 """
 
-import numpy as np
-
 from .common import emit, timed
+
+#: the five Table II workload rows (registry also holds uniform + comm)
+PAPER_WORKLOADS = ("hft", "rl_allreduce", "datacenter", "industry", "underwater")
 
 
 def _baseline(n_ports):
@@ -19,44 +24,28 @@ def _baseline(n_ports):
 
 
 def run(back_annotation: bool = True):
-    from repro.core import (ArchRequest, SLA, bind, compressed_protocol,
-                            ethernet_ipv4_udp)
-    from repro.sim import optimize_switch, run_netsim, synthesize
-    from repro.traces import WORKLOADS
+    from repro.api import registry, run_scenario
+    from repro.core import bind, ethernet_ipv4_udp
+    from repro.sim import run_netsim, synthesize
 
     eth512 = bind(ethernet_ipv4_udp(), flit_bits=512)
-    slas = {
-        "hft": SLA(p99_latency_ns=5e3, drop_rate=1e-3),
-        "rl_allreduce": SLA(p99_latency_ns=1e6, drop_rate=1e-2),
-        "datacenter": SLA(p99_latency_ns=1e6, drop_rate=1e-2),
-        "industry": SLA(p99_latency_ns=1e5, drop_rate=1e-3),
-        "underwater": SLA(p99_latency_ns=1e5, drop_rate=1e-3),
-    }
     reductions = {}
-    for name, gen in WORKLOADS.items():
-        if name == "uniform":
-            continue
-        tr = gen(seed=0)
-        n = tr.n_ports
-        addr_bits = max(4, (n - 1).bit_length())
-        proto = compressed_protocol(addr_bits=addr_bits, length_bits=12,
-                                    name=f"spac_{name}")
-        bound = bind(proto, flit_bits=256)
-        (res, prob), us = timed(
-            lambda: optimize_switch(ArchRequest(n_ports=n, addr_bits=addr_bits),
-                                    bound, tr, sla=slas[name],
-                                    back_annotation=back_annotation), repeats=1)
-        base = _baseline(n)
+    for name in PAPER_WORKLOADS:
+        scenario = registry[name].override(back_annotation=back_annotation)
+        report, us = timed(lambda: run_scenario(scenario), repeats=1)
+        bound, tr = report.problem.bound, report.problem.trace
+        base = _baseline(scenario.arch.n_ports)
         v_base = run_netsim(base, eth512, tr, back_annotation=back_annotation)
-        if res.best is None:
+        if report.best is None:
             emit(f"table2/{name}", us, "DSE found no feasible design")
             continue
-        v_opt = res.best_verify
+        v_opt = report.best_verify
         red = 1 - v_opt.mean_latency_ns / v_base.mean_latency_ns
         reductions[name] = red
-        r_opt, r_base = synthesize(res.best, bound), synthesize(base, eth512)
+        r_opt, r_base = synthesize(report.best, bound), synthesize(base, eth512)
+        hdr = bound.header_bytes
         emit(f"table2/{name}", us,
-             f"arch={res.best.short().replace(',', ';')}; hdr={proto.header_bytes}B "
+             f"arch={report.best.short().replace(',', ';')}; hdr={hdr}B "
              f"(vs 42B); mean={v_opt.mean_latency_ns:.0f}ns vs base "
              f"{v_base.mean_latency_ns:.0f}ns; latency-reduction={red:.1%}; "
              f"drop={v_opt.drop_rate:.1e} (base {v_base.drop_rate:.1e}); "

@@ -6,12 +6,9 @@ The kernel consumes gradient packets addressed to the aggregator port and
 releases one aggregated packet per round once all workers have contributed,
 cutting aggregator-port egress by ~(N-1)/N.
 
-    PYTHONPATH=src python examples/inswitch_allreduce.py
+    pip install -e .   # once
+    python examples/inswitch_allreduce.py
 """
-
-import sys
-
-sys.path.insert(0, "src")
 
 import jax.numpy as jnp
 import numpy as np

@@ -6,48 +6,43 @@ histogram at a target token-drop rate (the paper's VOQ-depth sizing), picks
 the payload protocol (bf16 vs int8 wire format) and the all-to-all schedule,
 then verifies on the real fabric.
 
-    PYTHONPATH=src python examples/moe_dse_autotune.py
+The whole experiment is the registry's ``moe_dispatch`` scenario — one
+serializable spec (``spac show moe_dispatch``); ``autotune_moe`` remains the
+legacy one-call wrapper over the same machinery.
+
+    pip install -e .   # once
+    python examples/moe_dse_autotune.py
 """
 
-import sys
-
-sys.path.insert(0, "src")
-
-import jax
-import jax.numpy as jnp
-
-from repro.launch.mesh import compat_make_mesh
 import numpy as np
 
-from repro.comm import autotune_moe
-from repro.models import SINGLE_POD_PLAN, ModelConfig, MoEOptions
-from repro.models.moe import apply_moe, init_moe
+from repro.api import registry, run_scenario
+from repro.models import MoEOptions
+from repro.models.moe import apply_moe
 
 
 def main():
-    mesh = compat_make_mesh((1, 1), ("data", "model"))
-    cfg = ModelConfig(name="moe-demo", family="moe", n_layers=1, d_model=512,
-                      n_heads=8, n_kv_heads=4, d_ff=1024, vocab=1000,
-                      moe_experts=32, moe_topk=4)
-    plan = SINGLE_POD_PLAN
-    params, _ = init_moe(jax.random.PRNGKey(0), cfg, plan)
-    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256, 512), jnp.bfloat16)
+    scenario = registry["moe_dispatch"]
+    print("scenario spec:", scenario.to_json(), sep="\n")
+
+    report = run_scenario(scenario, verbose=True)
+    problem = report.problem                    # the live CommDSEProblem
 
     # fixed general-purpose baseline (the "SPAC Ethernet" of the fabric)
-    _, aux = apply_moe(params, cfg, plan, mesh, x, MoEOptions(capacity_factor=1.25))
+    _, aux = apply_moe(problem.params, problem.cfg, problem.plan, problem.mesh,
+                       problem.sample_x, MoEOptions(capacity_factor=1.25))
     load = np.asarray(aux["expert_load"], float)
-    print(f"baseline  : cf=1.25/bf16/a2a×1  drop={float(aux['drop_frac']):.4f} "
+    print(f"\nbaseline  : cf=1.25/bf16/a2a×1  drop={float(aux['drop_frac']):.4f} "
           f"load_cv={load.std()/load.mean():.2f}")
 
-    # analytics modelled at 16-way expert parallelism (the production mesh)
-    result, problem = autotune_moe(params, cfg, plan, mesh, x, model_tp=16,
-                                   verbose=True)
+    result = report.result
     print()
     print(result.summary())
     best = result.best
     print(f"\nselected CommSpec : {best.short()}")
     print(f"verified drop     : {result.best_verify.drop_rate:.4f} "
-          f"(target ε=2e-2, statistical sizing from the routing trace)")
+          f"(target ε={scenario.sla.drop_rate:g}, statistical sizing from "
+          "the routing trace)")
     print(f"dispatch buffers  : {problem._buffer_bytes(best)/1e6:.2f} MB/device "
           f"(wire {problem._a2a_bytes(best)/1e6:.2f} MB/step)")
     print("\nPareto front:")

@@ -1,46 +1,59 @@
-"""Quickstart: the two-stage SPAC workflow in ~40 lines.
+"""Quickstart: the two-stage SPAC workflow as one declarative Scenario.
 
 Stage 1 — define a custom protocol in the DSL and semantically bind it.
-Stage 2 — hand the DSE a traffic trace with every policy on AUTO; it returns
-the Pareto-optimal switch, verified in the hardware-aware simulator.
+Stage 2 — wrap protocol + trace + SLA in a ``Scenario`` (every architecture
+policy on AUTO) and run it; the DSE returns the Pareto-optimal switch,
+verified in the hardware-aware simulator.  The same spec serializes to JSON,
+so the experiment is reproducible from a config file (or the CLI:
+``spac run hft --sla-p99-ns 5000``).
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .   # once
+    python examples/quickstart.py
 """
 
-import sys
-
-sys.path.insert(0, "src")
-
-from repro.core import (ArchRequest, SLA, analyze, bind, compressed_protocol,
-                        ethernet_ipv4_udp)
-from repro.sim import optimize_switch, run_netsim, synthesize
-from repro.traces import hft
+from repro.api import ProtocolSpec, Scenario, TraceSpec, run_scenario
+from repro.api.scenario import Fidelity
+from repro.core import ArchRequest, SLA, analyze, ethernet_ipv4_udp
+from repro.api.runner import build_bound
+from repro.sim import synthesize
 
 
 def main():
+    # ---- the whole experiment, declaratively (a JSON-serializable spec)
+    scenario = Scenario(
+        name="hft_quickstart",
+        protocol=ProtocolSpec(
+            builder="compressed_protocol",
+            params={"name": "hft_wire", "addr_bits": 4, "qos_bits": 2,
+                    "length_bits": 6}),                   # 2-byte header
+        flit_bits=256,
+        trace=TraceSpec(generator="hft", params={"seed": 0}),
+        arch=ArchRequest(n_ports=8, addr_bits=4),         # every policy AUTO
+        sla=SLA(p99_latency_ns=5_000, drop_rate=1e-3),
+        fidelity=Fidelity(back_annotation=True),
+    )
+    print("scenario spec (reproducible config):")
+    print(scenario.to_json())
+
     # ---- protocol definition + semantic binding (single source of truth)
-    proto = compressed_protocol(name="hft_wire", addr_bits=4, qos_bits=2,
-                                length_bits=6)                   # 2-byte header
-    bound = bind(proto, flit_bits=256)
+    bound = build_bound(scenario)
+    print()
     print(bound.describe())
     print(f"vs Ethernet/IP/UDP: {ethernet_ipv4_udp().header_bytes} B of header\n")
 
-    # ---- trace-aware DSE (every architecture policy on AUTO)
-    trace = hft(seed=0)
-    print("trace:", analyze(trace).describe())
-    result, problem = optimize_switch(
-        ArchRequest(n_ports=8, addr_bits=4), bound, trace,
-        sla=SLA(p99_latency_ns=5_000, drop_rate=1e-3), verbose=True)
+    # ---- trace-aware DSE (Algorithm 1, batched stage-2 fan-out)
+    print("trace:", analyze(scenario.trace.build()).describe())
+    report = run_scenario(scenario, verbose=True)
     print()
-    print(result.summary())
+    print(report.summary())
 
-    best = result.best
+    best = report.best
     rep = synthesize(best, bound)
     print(f"\nselected micro-architecture : {best.short()}")
     print(f"resources                   : {rep.luts/1e3:.1f}k LUT, "
           f"{rep.brams:.0f} BRAM @ {rep.fmax_mhz:.0f} MHz")
-    print(f"verified                    : p99 {result.best_verify.p99_latency_ns:.0f} ns, "
-          f"drops {result.best_verify.drop_rate:.2e}")
+    print(f"verified                    : p99 {report.best_verify.p99_latency_ns:.0f} ns, "
+          f"drops {report.best_verify.drop_rate:.2e}")
 
 
 if __name__ == "__main__":

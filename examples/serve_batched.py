@@ -1,13 +1,11 @@
 """Serving driver: continuous batching over the jitted decode step.
 
-    PYTHONPATH=src python examples/serve_batched.py --arch llama3.2-1b
+    pip install -e .   # once
+    python examples/serve_batched.py --arch llama3.2-1b
 """
 
 import argparse
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 

@@ -3,16 +3,14 @@ for a few hundred steps on synthetic data with the full production substrate —
 microbatched train step, WSD schedule, async checkpointing, fault-tolerant
 supervisor (with an injected crash to prove restart), and exact data resume.
 
-    PYTHONPATH=src python examples/train_e2e.py --steps 200      # full run
-    PYTHONPATH=src python examples/train_e2e.py --steps 20       # quick look
+    pip install -e .   # once
+    python examples/train_e2e.py --steps 200      # full run
+    python examples/train_e2e.py --steps 20       # quick look
 """
 
 import argparse
-import sys
 import tempfile
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

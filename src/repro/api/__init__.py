@@ -1,0 +1,21 @@
+"""Declarative Scenario/Campaign API — the repo's front door.
+
+One serializable ``Scenario`` spec carries an experiment from protocol
+definition to verified Pareto front; ``registry`` holds the paper's workload
+scenarios; ``run_scenario``/``run_campaign`` execute one or many (campaigns
+share trace analysis and batch stage 2 across scenarios); ``repro.api.cli``
+is the ``spac`` console entry point.
+"""
+
+from .registry import ScenarioRegistry, registry
+from .runner import (CampaignReport, ScenarioReport, build_bound,
+                     build_problem, run_campaign, run_scenario)
+from .scenario import (CommModelSpec, Fidelity, PROTOCOL_BUILDERS,
+                       ProtocolSpec, Scenario, TraceSpec)
+
+__all__ = [
+    "CampaignReport", "CommModelSpec", "Fidelity", "PROTOCOL_BUILDERS",
+    "ProtocolSpec", "Scenario", "ScenarioRegistry", "ScenarioReport",
+    "TraceSpec", "build_bound", "build_problem", "registry", "run_campaign",
+    "run_scenario",
+]

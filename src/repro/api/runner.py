@@ -1,0 +1,403 @@
+"""Scenario execution: one spec in, a structured ``ScenarioReport`` out —
+and campaign-level fan-out that batches stage 2 across scenarios.
+
+``run_scenario`` is semantically identical to the legacy hand-wired path
+(``optimize_switch`` / ``autotune_moe``): it builds the protocol, binds it,
+materialises the trace, instantiates the domain's ``DSEProblem`` and runs
+Algorithm 1 with the scenario's SLA/budget/fidelity.  The legacy wrappers
+remain as thin compatibility shims over the same machinery.
+
+``run_campaign`` exploits the staged DSE (``repro.core.dse``): it prunes
+every scenario (stage 1), then fans *all* scenarios' surviving candidates
+through the batched surrogate engine — scenarios that share a trace and a
+bound protocol share one jitted batched call, and every scenario reuses a
+cached trace + feature analysis — before finishing stages 3/4 per scenario.
+The campaign report carries aggregate stage-2 throughput (candidates/sec
+across the whole campaign), the figure of merit PR 1's engine optimises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.binding import BoundProtocol, bind
+from repro.core.dse import (DSEProblem, DSEResult, ResourceBudget, SLA,
+                            StageLog, SurrogateResult, VerifyResult,
+                            finalize_result, stage1_static, stage2_screen,
+                            stage3_verify)
+
+from .registry import registry
+from .scenario import Scenario
+
+__all__ = ["ScenarioReport", "CampaignReport", "build_bound", "build_problem",
+           "run_scenario", "run_campaign"]
+
+
+# --------------------------------------------------------------------------
+# problem construction
+# --------------------------------------------------------------------------
+
+def build_bound(scenario: Scenario) -> BoundProtocol:
+    """Protocol spec → built ``Protocol`` → semantic binding (§III-A)."""
+    return bind(scenario.protocol.build(), scenario.semantic_binding(),
+                flit_bits=scenario.flit_bits)
+
+
+def _default_budget(scenario: Scenario) -> ResourceBudget:
+    if scenario.domain == "comm":
+        return ResourceBudget({"bytes_per_device": 4e9})
+    from repro.sim.resources import ALVEO_U45N
+    return ResourceBudget(dict(ALVEO_U45N))
+
+
+def _build_comm_problem(scenario: Scenario) -> DSEProblem:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm.dse_comm import CommDSEProblem
+    from repro.launch.mesh import compat_make_mesh
+    from repro.models import SINGLE_POD_PLAN, ModelConfig
+    from repro.models.moe import init_moe
+
+    c = scenario.comm
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
+    cfg = ModelConfig(name=scenario.name, family="moe", n_layers=1,
+                      d_model=c.d_model, n_heads=c.n_heads,
+                      n_kv_heads=c.n_kv_heads, d_ff=c.d_ff, vocab=c.vocab,
+                      moe_experts=c.moe_experts, moe_topk=c.moe_topk,
+                      router=c.router)
+    plan = SINGLE_POD_PLAN
+    params, _ = init_moe(jax.random.PRNGKey(c.seed), cfg, plan)
+    x = jax.random.normal(jax.random.PRNGKey(c.seed + 1),
+                          (c.batch, c.seq, c.d_model), jnp.bfloat16)
+    return CommDSEProblem(params, cfg, plan, mesh, x, model_tp=c.model_tp)
+
+
+def build_problem(
+    scenario: Scenario,
+    *,
+    trace=None,
+    features=None,
+) -> Tuple[DSEProblem, SLA, ResourceBudget]:
+    """Materialise the scenario into a ready-to-run ``DSEProblem``.
+
+    ``trace``/``features`` let a campaign hand scenarios that share a
+    ``TraceSpec`` one built trace and one feature analysis.
+    """
+    budget = scenario.budget or _default_budget(scenario)
+    if scenario.domain == "comm":
+        return _build_comm_problem(scenario), scenario.sla, budget
+    from repro.sim.switch_problem import SwitchDSEProblem
+    bound = build_bound(scenario)
+    tr = trace if trace is not None else scenario.trace.build()
+    problem = SwitchDSEProblem(
+        scenario.arch, bound, tr,
+        back_annotation=scenario.fidelity.back_annotation,
+        features=features)
+    return problem, scenario.sla, budget
+
+
+# --------------------------------------------------------------------------
+# reports
+# --------------------------------------------------------------------------
+
+def _short(cand: Any) -> str:
+    fn = getattr(cand, "short", None)
+    return fn() if callable(fn) else repr(cand)
+
+
+def _verify_dict(v: VerifyResult) -> Dict[str, float]:
+    return {
+        "p99_latency_ns": float(v.p99_latency_ns),
+        "mean_latency_ns": float(v.mean_latency_ns),
+        "drop_rate": float(v.drop_rate),
+        "throughput_gbps": float(v.throughput_gbps),
+    }
+
+
+@dataclasses.dataclass
+class ScenarioReport:
+    """Structured outcome of one scenario: Pareto front, best arch, verify
+    metrics, resource report, stage logs.  ``problem``/``result`` are the
+    live objects for further poking; ``to_dict()`` is the serializable view."""
+
+    scenario: Scenario
+    result: DSEResult
+    problem: DSEProblem
+    wall_time_s: float
+    stage2_candidates: int = 0
+    stage2_time_s: float = 0.0
+
+    @property
+    def best(self) -> Optional[Any]:
+        return self.result.best
+
+    @property
+    def best_verify(self) -> Optional[VerifyResult]:
+        return self.result.best_verify
+
+    @property
+    def pareto(self) -> List[Tuple[Any, VerifyResult]]:
+        return self.result.pareto
+
+    @property
+    def resources(self) -> Dict[str, float]:
+        if self.result.best is None:
+            return {}
+        return {k: float(v)
+                for k, v in self.problem.resources(self.result.best).items()}
+
+    def summary(self) -> str:
+        head = (f"scenario {self.scenario.name!r} [{self.scenario.domain}] "
+                f"({self.wall_time_s:.2f}s)")
+        lines = [head, self.result.summary()]
+        res = self.resources
+        if res:
+            lines.append("  resources: " + " ".join(
+                f"{k}={v:,.0f}" for k, v in sorted(res.items()) if k != "bram"))
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario.to_dict(),
+            "best": _short(self.result.best) if self.result.best is not None else None,
+            "best_verify": (_verify_dict(self.result.best_verify)
+                            if self.result.best_verify is not None else None),
+            "resources": self.resources,
+            "pareto": [
+                {"candidate": _short(a), **_verify_dict(v)}
+                for a, v in self.result.pareto
+            ],
+            "stages": [
+                {"stage": lg.stage, "considered": lg.considered,
+                 "survived": lg.survived}
+                for lg in self.result.logs
+            ],
+            "n_verified": len(self.result.evaluated),
+            "wall_time_s": self.wall_time_s,
+        }
+
+
+@dataclasses.dataclass
+class CampaignReport:
+    """Per-scenario reports + aggregate batched stage-2 throughput."""
+
+    name: str
+    reports: List[ScenarioReport]
+    stage2_candidates: int
+    stage2_time_s: float
+    stage2_batches: int
+    shared_trace_scenarios: int      # scenarios that reused a cached trace
+    wall_time_s: float
+
+    @property
+    def stage2_cands_per_sec(self) -> float:
+        return self.stage2_candidates / max(self.stage2_time_s, 1e-12)
+
+    def __getitem__(self, name: str) -> ScenarioReport:
+        for r in self.reports:
+            if r.scenario.name == name:
+                return r
+        raise KeyError(name)
+
+    def summary(self) -> str:
+        lines = [f"campaign {self.name!r}: {len(self.reports)} scenarios "
+                 f"in {self.wall_time_s:.2f}s"]
+        for r in self.reports:
+            best = _short(r.best) if r.best is not None else "infeasible"
+            v = r.best_verify
+            tail = (f" p99={v.p99_latency_ns:.0f}ns drop={v.drop_rate:.1e}"
+                    if v is not None else "")
+            lines.append(f"  {r.scenario.name:16s} -> {best}{tail}")
+        lines.append(
+            f"  stage-2 fan-out: {self.stage2_candidates} candidates in "
+            f"{self.stage2_batches} batched calls, {self.stage2_time_s*1e3:.1f}ms "
+            f"({self.stage2_cands_per_sec:.0f} cand/s aggregate; "
+            f"{self.shared_trace_scenarios} scenario(s) shared a trace)")
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "scenarios": [r.to_dict() for r in self.reports],
+            "stage2_candidates": self.stage2_candidates,
+            "stage2_time_s": self.stage2_time_s,
+            "stage2_cands_per_sec": self.stage2_cands_per_sec,
+            "stage2_batches": self.stage2_batches,
+            "shared_trace_scenarios": self.shared_trace_scenarios,
+            "wall_time_s": self.wall_time_s,
+        }
+
+
+# --------------------------------------------------------------------------
+# execution
+# --------------------------------------------------------------------------
+
+def run_scenario(scenario: Union[Scenario, str], *, verbose: bool = False) -> ScenarioReport:
+    """One spec in, verified Pareto front out (the quickstart in one call).
+
+    Runs the same staged composition as ``run_dse`` (inlined only to time
+    the batched surrogate call); ``tests/test_api.py`` asserts the stage
+    logs and Pareto front stay identical to the legacy ``optimize_switch``
+    → ``run_dse`` path, so the two cannot silently diverge.
+    """
+    if isinstance(scenario, str):
+        scenario = registry[scenario]
+    t0 = time.perf_counter()
+    problem, sla, budget = build_problem(scenario)
+    fid = scenario.fidelity
+    active, log1 = stage1_static(problem, delta=fid.delta)
+    if verbose:
+        print(log1)
+    t2 = time.perf_counter()
+    srs = problem.surrogate_batch(active)
+    stage2_time = time.perf_counter() - t2
+    valid, log2 = stage2_screen(problem, active, sla, surrogates=srs)
+    if verbose:
+        print(log2)
+    evaluated, best, best_v, log3 = stage3_verify(problem, valid, sla, budget,
+                                                  top_k=fid.top_k)
+    if verbose:
+        print(log3)
+    result = finalize_result(problem, evaluated, best, best_v, [log1, log2, log3])
+    return ScenarioReport(scenario=scenario, result=result, problem=problem,
+                          wall_time_s=time.perf_counter() - t0,
+                          stage2_candidates=len(active),
+                          stage2_time_s=stage2_time)
+
+
+@dataclasses.dataclass
+class _Ctx:
+    scenario: Scenario
+    problem: DSEProblem
+    budget: ResourceBudget
+    shared_trace: bool
+    group_key: Optional[str]                 # None -> own surrogate_batch call
+    active: List[Any] = dataclasses.field(default_factory=list)
+    log1: Optional[StageLog] = None
+    surrogates: List[SurrogateResult] = dataclasses.field(default_factory=list)
+    stage1_time_s: float = 0.0
+    stage2_time_s: float = 0.0               # this scenario's share of its batch
+
+
+def _switch_group_key(s: Scenario) -> str:
+    """Scenarios share one batched stage-2 call iff this key matches: the
+    batched engine takes one (trace, bound protocol, back-annotation) tuple."""
+    return json.dumps({
+        "trace": s.trace.to_dict(),
+        "protocol": s.protocol.to_dict(),
+        "flit_bits": s.flit_bits,
+        "binding": s.binding,
+        "back_annotation": s.fidelity.back_annotation,
+    }, sort_keys=True)
+
+
+def run_campaign(
+    scenarios: Sequence[Union[Scenario, str]],
+    *,
+    name: str = "campaign",
+    verbose: bool = False,
+) -> CampaignReport:
+    """Run many scenarios with shared trace analysis and batched stage 2.
+
+    Per-scenario results are identical to ``run_scenario`` (candidates of the
+    batched engine are row-independent), so a campaign is never a fidelity
+    trade-off — only a throughput one.
+    """
+    scns = [registry[s] if isinstance(s, str) else s for s in scenarios]
+    if not scns:
+        raise ValueError("run_campaign needs at least one scenario")
+    t_start = time.perf_counter()
+
+    # ---- build: share built traces + feature analysis across scenarios
+    from repro.core.features import analyze
+    trace_cache: Dict[str, Tuple[Any, Any]] = {}
+    ctxs: List[_Ctx] = []
+    for s in scns:
+        if s.domain == "switch":
+            tkey = s.trace.key()
+            shared = tkey in trace_cache
+            if not shared:
+                tr = s.trace.build()
+                trace_cache[tkey] = (tr, analyze(tr))
+            tr, feats = trace_cache[tkey]
+            problem, _, budget = build_problem(s, trace=tr, features=feats)
+            ctxs.append(_Ctx(s, problem, budget, shared, _switch_group_key(s)))
+        else:
+            problem, _, budget = build_problem(s)
+            ctxs.append(_Ctx(s, problem, budget, False, None))
+
+    # ---- stage 1 per scenario
+    for ctx in ctxs:
+        t0 = time.perf_counter()
+        ctx.active, ctx.log1 = stage1_static(ctx.problem,
+                                             delta=ctx.scenario.fidelity.delta)
+        ctx.stage1_time_s = time.perf_counter() - t0
+        if verbose:
+            print(f"[{ctx.scenario.name}] {ctx.log1}")
+
+    # ---- stage 2: fan every scenario's survivors through the batched engine;
+    # scenarios sharing (trace, bound, fidelity) share one call
+    groups: Dict[str, List[_Ctx]] = {}
+    order: List[str] = []
+    for i, ctx in enumerate(ctxs):
+        key = ctx.group_key if ctx.group_key is not None else f"solo-{i}"
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(ctx)
+
+    total_cands = 0
+    stage2_time = 0.0
+    n_batches = 0
+    for key in order:
+        members = groups[key]
+        archs = [a for ctx in members for a in ctx.active]
+        srs: List[SurrogateResult] = []
+        elapsed = 0.0
+        if archs:
+            t0 = time.perf_counter()
+            srs = members[0].problem.surrogate_batch(archs)
+            elapsed = time.perf_counter() - t0
+            stage2_time += elapsed
+            n_batches += 1
+            total_cands += len(archs)
+        off = 0
+        for ctx in members:
+            ctx.surrogates = srs[off:off + len(ctx.active)]
+            # apportion the batched call's cost by candidate share
+            ctx.stage2_time_s = elapsed * len(ctx.active) / max(len(archs), 1)
+            off += len(ctx.active)
+
+    # ---- stages 2-screen / 3 / 4 per scenario
+    reports: List[ScenarioReport] = []
+    for ctx in ctxs:
+        s = ctx.scenario
+        t0 = time.perf_counter()
+        valid, log2 = stage2_screen(ctx.problem, ctx.active, s.sla,
+                                    surrogates=ctx.surrogates)
+        evaluated, best, best_v, log3 = stage3_verify(
+            ctx.problem, valid, s.sla, ctx.budget, top_k=s.fidelity.top_k)
+        result = finalize_result(ctx.problem, evaluated, best, best_v,
+                                 [ctx.log1, log2, log3])
+        if verbose:
+            print(f"[{s.name}] {log2}\n[{s.name}] {log3}")
+        reports.append(ScenarioReport(
+            scenario=s, result=result, problem=ctx.problem,
+            wall_time_s=(ctx.stage1_time_s + ctx.stage2_time_s
+                         + time.perf_counter() - t0),
+            stage2_candidates=len(ctx.active),
+            stage2_time_s=ctx.stage2_time_s))
+
+    return CampaignReport(
+        name=name,
+        reports=reports,
+        stage2_candidates=total_cands,
+        stage2_time_s=stage2_time,
+        stage2_batches=n_batches,
+        shared_trace_scenarios=sum(c.shared_trace for c in ctxs),
+        wall_time_s=time.perf_counter() - t_start,
+    )

@@ -1,0 +1,436 @@
+"""Declarative, serializable experiment specs: one ``Scenario`` from protocol
+to Pareto front.
+
+The paper's pitch (§III) is a *unified workflow*: one spec drives the parser
+generator, the simulator stack, and the trace-aware DSE.  A ``Scenario``
+bundles everything one experiment needs —
+
+  * the protocol (a stock constructor by name + params, or an inline
+    field-by-field layout), the flit width and semantic-binding overrides,
+  * the traffic trace (a ``repro.traces`` generator by name + params, or a
+    ``Trace.save``d ``.npz`` by path),
+  * the architecture request (``ArchRequest`` with ``AUTO`` policies) for the
+    switch domain, or a ``CommModelSpec`` for the TPU comm domain,
+  * the ``SLA``, the ``ResourceBudget``, and the fidelity knobs,
+
+— and round-trips through ``to_dict()/from_dict()`` + JSON, so every
+experiment is a reproducible config file (``spac run``/``spac sweep`` consume
+exactly these).  All spec classes are frozen dataclasses; equality is
+structural and survives the JSON round-trip bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.core.archspec import (AUTO, ArchRequest, CustomKernelSpec,
+                                 ForwardTableKind, SchedulerKind, VOQKind)
+from repro.core.binding import KNOWN_SEMANTICS, SemanticBinding
+from repro.core.dse import ResourceBudget, SLA
+from repro.core.dsl import (Field, Protocol, compressed_protocol,
+                            ethernet_ipv4_udp)
+
+__all__ = [
+    "ProtocolSpec",
+    "TraceSpec",
+    "CommModelSpec",
+    "Fidelity",
+    "Scenario",
+    "PROTOCOL_BUILDERS",
+]
+
+#: stock protocol constructors a ``ProtocolSpec`` may reference by name
+PROTOCOL_BUILDERS = {
+    "compressed_protocol": compressed_protocol,
+    "ethernet_ipv4_udp": ethernet_ipv4_udp,
+}
+
+
+# --------------------------------------------------------------------------
+# serialization helpers
+# --------------------------------------------------------------------------
+
+def _num_to_json(x: float):
+    """Floats must survive json.dumps with standard-compliant output."""
+    if isinstance(x, float) and math.isinf(x):
+        return "inf" if x > 0 else "-inf"
+    return x
+
+
+def _num_from_json(x):
+    if x == "inf":
+        return math.inf
+    if x == "-inf":
+        return -math.inf
+    return x
+
+
+_ENUMS = {"fwd": ForwardTableKind, "voq": VOQKind, "sched": SchedulerKind}
+
+
+def _policy_to_json(v):
+    if v is AUTO:
+        return "auto"
+    if isinstance(v, (ForwardTableKind, VOQKind, SchedulerKind)):
+        return v.value
+    return v
+
+
+def _policy_from_json(key: str, v):
+    if v == "auto":
+        return AUTO
+    if key in _ENUMS and isinstance(v, str):
+        return _ENUMS[key](v)
+    return v
+
+
+def arch_to_dict(req: ArchRequest) -> Dict[str, Any]:
+    d = {
+        "n_ports": req.n_ports,
+        "addr_bits": req.addr_bits,
+        "bus_bits": _policy_to_json(req.bus_bits),
+        "fwd": _policy_to_json(req.fwd),
+        "voq": _policy_to_json(req.voq),
+        "sched": _policy_to_json(req.sched),
+        "voq_depth": _policy_to_json(req.voq_depth),
+    }
+    if req.custom_kernels:
+        # the *performance interface* is declarative and serializes; the
+        # functional model (fn) is code and cannot — reattach it in code
+        d["custom_kernels"] = [
+            {"name": k.name, "ii": k.ii, "latency_cycles": k.latency_cycles,
+             "luts": k.luts, "ffs": k.ffs, "brams": k.brams}
+            for k in req.custom_kernels
+        ]
+    return d
+
+
+def arch_from_dict(d: Mapping[str, Any]) -> ArchRequest:
+    kernels = tuple(CustomKernelSpec(**k) for k in d.get("custom_kernels", ()))
+    return ArchRequest(
+        n_ports=int(d["n_ports"]),
+        addr_bits=int(d["addr_bits"]),
+        bus_bits=_policy_from_json("bus_bits", d.get("bus_bits", "auto")),
+        fwd=_policy_from_json("fwd", d.get("fwd", "auto")),
+        voq=_policy_from_json("voq", d.get("voq", "auto")),
+        sched=_policy_from_json("sched", d.get("sched", "auto")),
+        voq_depth=_policy_from_json("voq_depth", d.get("voq_depth", "auto")),
+        custom_kernels=kernels,
+    )
+
+
+def sla_to_dict(sla: SLA) -> Dict[str, Any]:
+    return {
+        "p99_latency_ns": _num_to_json(sla.p99_latency_ns),
+        "drop_rate": sla.drop_rate,
+        "min_throughput_gbps": sla.min_throughput_gbps,
+    }
+
+
+def sla_from_dict(d: Mapping[str, Any]) -> SLA:
+    return SLA(
+        p99_latency_ns=float(_num_from_json(d.get("p99_latency_ns", "inf"))),
+        drop_rate=float(d.get("drop_rate", 1e-3)),
+        min_throughput_gbps=float(d.get("min_throughput_gbps", 0.0)),
+    )
+
+
+# --------------------------------------------------------------------------
+# component specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSpec:
+    """Protocol by stock constructor name + params, or inline field layout."""
+
+    builder: str = "compressed_protocol"    # a PROTOCOL_BUILDERS key | "inline"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    name: Optional[str] = None              # protocol name for inline layouts
+    fields: Optional[Tuple[Field, ...]] = None
+
+    def __post_init__(self):
+        if self.builder == "inline":
+            if not self.fields:
+                raise ValueError("inline ProtocolSpec needs a non-empty fields tuple")
+        elif self.builder not in PROTOCOL_BUILDERS:
+            raise ValueError(
+                f"unknown protocol builder {self.builder!r}; "
+                f"known: {sorted(PROTOCOL_BUILDERS)} or 'inline'")
+
+    @staticmethod
+    def inline(protocol: Protocol) -> "ProtocolSpec":
+        """Capture an existing ``Protocol`` field-by-field."""
+        return ProtocolSpec(builder="inline", name=protocol.name,
+                            fields=tuple(protocol.fields))
+
+    def build(self) -> Protocol:
+        if self.builder == "inline":
+            return Protocol(self.name or "inline", self.fields)
+        return PROTOCOL_BUILDERS[self.builder](**dict(self.params))
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"builder": self.builder}
+        if self.params:
+            d["params"] = dict(self.params)
+        if self.name is not None:
+            d["name"] = self.name
+        if self.fields is not None:
+            d["fields"] = [
+                {"name": f.name, "bits": f.bits, "semantic": f.semantic,
+                 "default": f.default}
+                for f in self.fields
+            ]
+        return d
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "ProtocolSpec":
+        fields = d.get("fields")
+        return ProtocolSpec(
+            builder=d.get("builder", "compressed_protocol"),
+            params=dict(d.get("params", {})),
+            name=d.get("name"),
+            fields=tuple(Field(**f) for f in fields) if fields is not None else None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Traffic by generator name (``repro.traces.WORKLOADS``) or saved file."""
+
+    generator: Optional[str] = None         # a WORKLOADS key
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    path: Optional[str] = None              # Trace.save()d .npz
+
+    def __post_init__(self):
+        if (self.generator is None) == (self.path is None):
+            raise ValueError("TraceSpec needs exactly one of generator / path")
+
+    def build(self):
+        from repro.traces import Trace
+        from repro.traces.workloads import WORKLOADS
+        if self.path is not None:
+            return Trace.load(self.path)
+        if self.generator not in WORKLOADS:
+            raise ValueError(f"unknown trace generator {self.generator!r}; "
+                             f"known: {sorted(WORKLOADS)}")
+        return WORKLOADS[self.generator](**dict(self.params))
+
+    def key(self) -> str:
+        """Canonical identity — campaigns share one built trace per key."""
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {}
+        if self.generator is not None:
+            d["generator"] = self.generator
+        if self.params:
+            d["params"] = dict(self.params)
+        if self.path is not None:
+            d["path"] = self.path
+        return d
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "TraceSpec":
+        return TraceSpec(generator=d.get("generator"),
+                         params=dict(d.get("params", {})),
+                         path=d.get("path"))
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModelSpec:
+    """The comm-domain analogue of ``ArchRequest``: the MoE/gradient-bucket
+    model whose routing trace drives ``CommDSEProblem``."""
+
+    d_model: int = 512
+    d_ff: int = 1024
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    vocab: int = 1000
+    moe_experts: int = 32
+    moe_topk: int = 4
+    batch: int = 8
+    seq: int = 256
+    seed: int = 0
+    model_tp: int = 16          # tensor extent for the analytic fabric model
+    router: str = "learned_topk"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "CommModelSpec":
+        return CommModelSpec(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class Fidelity:
+    """Knobs trading DSE speed for accuracy (stage granularity unchanged)."""
+
+    back_annotation: bool = True   # η from the cycle sim vs the analytic fits
+    delta: float = 0.2             # stage-1 timing slack
+    top_k: int = 8                 # stage-3 exploration width
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "Fidelity":
+        return Fidelity(**dict(d))
+
+
+# --------------------------------------------------------------------------
+# the Scenario
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One experiment, declaratively: protocol → binding → trace → DSE → SLA.
+
+    ``domain`` selects the problem family: ``"switch"`` (the paper's FPGA
+    switch, needs ``arch``) or ``"comm"`` (the TPU dispatch fabric, needs
+    ``comm``).  ``budget=None`` means the domain default (Alveo U45N for
+    switch, 4 GB dispatch-buffer HBM for comm).
+    """
+
+    name: str
+    domain: str = "switch"
+    protocol: ProtocolSpec = ProtocolSpec()
+    flit_bits: int = 256
+    binding: Dict[str, str] = dataclasses.field(default_factory=dict)
+    trace: TraceSpec = TraceSpec(generator="uniform")
+    arch: Optional[ArchRequest] = None
+    comm: Optional[CommModelSpec] = None
+    sla: SLA = SLA()
+    budget: Optional[ResourceBudget] = None
+    fidelity: Fidelity = Fidelity()
+    notes: str = ""
+
+    def __post_init__(self):
+        if self.domain not in ("switch", "comm"):
+            raise ValueError(f"unknown domain {self.domain!r}")
+        if self.domain == "switch" and self.arch is None:
+            raise ValueError(f"scenario {self.name!r}: switch domain needs arch")
+        if self.domain == "comm" and self.comm is None:
+            raise ValueError(f"scenario {self.name!r}: comm domain needs comm")
+        unknown = set(self.binding) - set(KNOWN_SEMANTICS)
+        if unknown:
+            raise ValueError(f"scenario {self.name!r}: unknown binding "
+                             f"semantics {sorted(unknown)}")
+
+    # ------------------------------------------------------------- building
+    def semantic_binding(self) -> SemanticBinding:
+        return SemanticBinding(**self.binding)
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "name": self.name,
+            "domain": self.domain,
+            "protocol": self.protocol.to_dict(),
+            "flit_bits": self.flit_bits,
+            "trace": self.trace.to_dict(),
+            "sla": sla_to_dict(self.sla),
+            "fidelity": self.fidelity.to_dict(),
+        }
+        if self.binding:
+            d["binding"] = dict(self.binding)
+        if self.arch is not None:
+            d["arch"] = arch_to_dict(self.arch)
+        if self.comm is not None:
+            d["comm"] = self.comm.to_dict()
+        if self.budget is not None:
+            d["budget"] = {"limits": {k: _num_to_json(v)
+                                      for k, v in self.budget.limits.items()}}
+        if self.notes:
+            d["notes"] = self.notes
+        return d
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "Scenario":
+        arch = d.get("arch")
+        comm = d.get("comm")
+        budget = d.get("budget")
+        return Scenario(
+            name=d["name"],
+            domain=d.get("domain", "switch"),
+            protocol=ProtocolSpec.from_dict(d.get("protocol", {})),
+            flit_bits=int(d.get("flit_bits", 256)),
+            binding=dict(d.get("binding", {})),
+            trace=TraceSpec.from_dict(d.get("trace", {"generator": "uniform"})),
+            arch=arch_from_dict(arch) if arch is not None else None,
+            comm=CommModelSpec.from_dict(comm) if comm is not None else None,
+            sla=sla_from_dict(d.get("sla", {})),
+            budget=(ResourceBudget({k: float(_num_from_json(v))
+                                    for k, v in budget["limits"].items()})
+                    if budget is not None else None),
+            fidelity=Fidelity.from_dict(d.get("fidelity", {})),
+            notes=d.get("notes", ""),
+        )
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "Scenario":
+        return Scenario.from_dict(json.loads(text))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @staticmethod
+    def load(path) -> "Scenario":
+        with open(path) as f:
+            return Scenario.from_json(f.read())
+
+    # ------------------------------------------------------------ overrides
+    def override(
+        self,
+        *,
+        sla_p99_latency_ns: Optional[float] = None,
+        sla_drop_rate: Optional[float] = None,
+        sla_min_throughput_gbps: Optional[float] = None,
+        trace_params: Optional[Mapping[str, Any]] = None,
+        budget_limits: Optional[Mapping[str, float]] = None,
+        back_annotation: Optional[bool] = None,
+        delta: Optional[float] = None,
+        top_k: Optional[int] = None,
+        flit_bits: Optional[int] = None,
+        name: Optional[str] = None,
+    ) -> "Scenario":
+        """Return a copy with the given knobs replaced (CLI flag surface)."""
+        sla = SLA(
+            p99_latency_ns=(self.sla.p99_latency_ns
+                            if sla_p99_latency_ns is None else sla_p99_latency_ns),
+            drop_rate=(self.sla.drop_rate
+                       if sla_drop_rate is None else sla_drop_rate),
+            min_throughput_gbps=(self.sla.min_throughput_gbps
+                                 if sla_min_throughput_gbps is None
+                                 else sla_min_throughput_gbps),
+        )
+        trace = self.trace
+        if trace_params:
+            if trace.generator is None:
+                raise ValueError("trace params override needs a generator-"
+                                 "sourced trace, not a file")
+            trace = dataclasses.replace(
+                trace, params={**trace.params, **dict(trace_params)})
+        budget = self.budget
+        if budget_limits:
+            base = dict(budget.limits) if budget is not None else {}
+            base.update(budget_limits)
+            budget = ResourceBudget(base)
+        fid = Fidelity(
+            back_annotation=(self.fidelity.back_annotation
+                             if back_annotation is None else back_annotation),
+            delta=self.fidelity.delta if delta is None else delta,
+            top_k=self.fidelity.top_k if top_k is None else top_k,
+        )
+        return dataclasses.replace(
+            self, sla=sla, trace=trace, budget=budget, fidelity=fid,
+            flit_bits=self.flit_bits if flit_bits is None else flit_bits,
+            name=self.name if name is None else name,
+        )

@@ -23,10 +23,15 @@ from .dse import (
     DSEResult,
     ResourceBudget,
     SLA,
+    StageLog,
     SurrogateResult,
     VerifyResult,
     depth_for_drop_rate,
+    finalize_result,
     run_dse,
+    stage1_static,
+    stage2_screen,
+    stage3_verify,
 )
 from .dsl import (
     ETHERNET_HEADER_BYTES,
@@ -43,9 +48,9 @@ __all__ = [
     "AUTO", "ArchRequest", "BUS_WIDTHS", "BoundProtocol", "CustomKernelSpec",
     "DSEProblem", "DSEResult", "ETHERNET_HEADER_BYTES", "Field",
     "ForwardTableKind", "ParserPlan", "Protocol", "ResourceBudget", "SLA",
-    "SchedulerKind", "SemanticBinding", "SurrogateResult", "SwitchArch",
-    "TraceFeatures", "VOQKind", "VerifyResult", "analyze", "bind",
+    "SchedulerKind", "SemanticBinding", "StageLog", "SurrogateResult",
+    "SwitchArch", "TraceFeatures", "VOQKind", "VerifyResult", "analyze", "bind",
     "compressed_protocol", "depth_for_drop_rate", "enumerate_candidates",
-    "ethernet_ipv4_udp", "hypervolume_2d", "is_dominated", "pareto_front",
-    "run_dse",
+    "ethernet_ipv4_udp", "finalize_result", "hypervolume_2d", "is_dominated",
+    "pareto_front", "run_dse", "stage1_static", "stage2_screen", "stage3_verify",
 ]

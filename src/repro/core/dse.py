@@ -34,6 +34,10 @@ __all__ = [
     "DSEResult",
     "StageLog",
     "run_dse",
+    "stage1_static",
+    "stage2_screen",
+    "stage3_verify",
+    "finalize_result",
     "depth_for_drop_rate",
 ]
 
@@ -173,33 +177,33 @@ def depth_for_drop_rate(q_occupancy: np.ndarray, eps: float) -> int:
     return max(1, int(math.ceil(d)))
 
 
-def run_dse(
-    problem: DSEProblem,
-    sla: SLA,
-    budget: ResourceBudget,
-    *,
-    delta: float = 0.2,
-    top_k: int = 8,
-    verbose: bool = False,
-) -> DSEResult:
-    """Algorithm 1: Progressive Constraint Satisfaction."""
-    logs: List[StageLog] = []
-
-    # ---------------------------------------------------- Stage 1: static pruning
+def stage1_static(problem: DSEProblem, *, delta: float = 0.2) -> Tuple[List[Any], StageLog]:
+    """Stage 1: static timing pruning over the enumerated templates."""
     cands = list(problem.candidates())
     active = []
     for a in cands:
         t_proc, t_arrival = problem.static_timing(a)
         if t_proc <= (1.0 + delta) * t_arrival:
             active.append(a)
-    logs.append(StageLog("stage1-static", len(cands), len(active)))
-    if verbose:
-        print(logs[-1])
+    return active, StageLog("stage1-static", len(cands), len(active))
 
-    # ------------------------------------------ Stage 2: coarse-grained profiling
-    # fan the whole surviving batch out through the problem's surrogate hook
-    # (vectorised where the problem provides it, serial loop otherwise)
-    srs = problem.surrogate_batch(active)
+
+def stage2_screen(
+    problem: DSEProblem,
+    active: Sequence[Any],
+    sla: SLA,
+    *,
+    surrogates: Optional[Sequence[SurrogateResult]] = None,
+) -> Tuple[List[Tuple[Any, SurrogateResult]], StageLog]:
+    """Stage 2: coarse-grained profiling + SLA screening.
+
+    ``surrogates`` lets a caller inject precomputed stage-2 results (index-
+    aligned with ``active``) — the campaign runner uses this to fan *several*
+    scenarios' candidates through one batched-engine call and hand each
+    scenario its slice back.  When absent, the problem's ``surrogate_batch``
+    hook runs (vectorised where the problem provides it, serial otherwise).
+    """
+    srs = list(surrogates) if surrogates is not None else problem.surrogate_batch(list(active))
     if len(srs) != len(active):
         raise ValueError(
             f"surrogate_batch returned {len(srs)} results for {len(active)} "
@@ -208,14 +212,24 @@ def run_dse(
     for a, sr in zip(active, srs):
         if sr.p(99) <= sla.p99_latency_ns and sr.throughput_gbps >= sla.min_throughput_gbps:
             valid.append((a, sr))
-    logs.append(StageLog("stage2-surrogate", len(active), len(valid)))
-    if verbose:
-        print(logs[-1])
+    return valid, StageLog("stage2-surrogate", len(active), len(valid))
 
-    # ------------------------------------------------ Stage 3: statistical sizing
-    # TopKLatency: explore the K best candidates by surrogate p99, plus the
-    # best of each architecture family (diversity-preserving)
-    valid.sort(key=lambda av: av[1].p(99))
+
+def stage3_verify(
+    problem: DSEProblem,
+    valid: Sequence[Tuple[Any, SurrogateResult]],
+    sla: SLA,
+    budget: ResourceBudget,
+    *,
+    top_k: int = 8,
+) -> Tuple[List[Tuple[Any, VerifyResult, Dict[str, float], bool]],
+           Optional[Any], Optional[VerifyResult], StageLog]:
+    """Stages 3+4: statistical sizing, resource pruning, full verification.
+
+    TopKLatency: explore the K best candidates by surrogate p99, plus the
+    best of each architecture family (diversity-preserving).
+    """
+    valid = sorted(valid, key=lambda av: av[1].p(99))
     explored = list(valid[: top_k if top_k > 0 else len(valid)])
     seen_keys = {id(a) for a, _ in explored}
     families = {}
@@ -245,10 +259,44 @@ def run_dse(
         if feasible:
             if best_v is None or problem.objectives(sized, v) < problem.objectives(best, best_v):
                 best, best_v = sized, v
-    logs.append(StageLog("stage3-sizing+verify", len(explored), sized_ok))
-    if verbose:
-        print(logs[-1])
+    return evaluated, best, best_v, StageLog("stage3-sizing+verify", len(explored), sized_ok)
 
+
+def finalize_result(
+    problem: DSEProblem,
+    evaluated: List[Tuple[Any, VerifyResult, Dict[str, float], bool]],
+    best: Optional[Any],
+    best_v: Optional[VerifyResult],
+    logs: List[StageLog],
+) -> DSEResult:
+    """Rank the verified candidates into a Pareto front and assemble the result."""
     feas = [(a, v) for a, v, _, ok in evaluated if ok] or [(a, v) for a, v, _, _ in evaluated]
     front = pareto_front(feas, key=lambda av: problem.objectives(av[0], av[1])) if feas else []
     return DSEResult(best=best, best_verify=best_v, pareto=front, evaluated=evaluated, logs=logs)
+
+
+def run_dse(
+    problem: DSEProblem,
+    sla: SLA,
+    budget: ResourceBudget,
+    *,
+    delta: float = 0.2,
+    top_k: int = 8,
+    verbose: bool = False,
+) -> DSEResult:
+    """Algorithm 1: Progressive Constraint Satisfaction.
+
+    Composed from the staged functions above so callers that need to
+    interleave stages across problems (``repro.api.run_campaign`` batches
+    stage 2 across scenarios) reuse the exact same semantics.
+    """
+    active, log1 = stage1_static(problem, delta=delta)
+    if verbose:
+        print(log1)
+    valid, log2 = stage2_screen(problem, active, sla)
+    if verbose:
+        print(log2)
+    evaluated, best, best_v, log3 = stage3_verify(problem, valid, sla, budget, top_k=top_k)
+    if verbose:
+        print(log3)
+    return finalize_result(problem, evaluated, best, best_v, [log1, log2, log3])

@@ -48,11 +48,13 @@ class SwitchDSEProblem(DSEProblem):
         *,
         back_annotation: bool = True,
         headroom: float = 1.25,
+        features: Optional[TraceFeatures] = None,
     ):
         self.request = request
         self.bound = bound
         self.trace = trace
-        self.features: TraceFeatures = analyze(trace)
+        # campaigns hand every problem sharing a trace one precomputed analysis
+        self.features: TraceFeatures = features if features is not None else analyze(trace)
         self.back_annotation = back_annotation
         self.headroom = headroom
 
@@ -123,7 +125,13 @@ def optimize_switch(
     top_k: int = 8,
     verbose: bool = False,
 ):
-    """One-call wrapper: trace in, Pareto-optimal switch out (Table II flow)."""
+    """One-call wrapper: trace in, Pareto-optimal switch out (Table II flow).
+
+    Compatibility wrapper for the pre-Scenario API.  New code should build a
+    ``repro.api.Scenario`` and call ``repro.api.run_scenario`` — a scenario is
+    the same (request, protocol, trace, SLA, budget) bundle as a serializable
+    config, and ``run_scenario`` runs exactly this path underneath.
+    """
     problem = SwitchDSEProblem(request, bound, trace, back_annotation=back_annotation)
     sla = sla or SLA(p99_latency_ns=math.inf, drop_rate=1e-3)
     budget = budget or ResourceBudget(dict(ALVEO_U45N))

@@ -44,6 +44,34 @@ class Trace:
         return Trace(self.name, self.time_s[:n], self.src[:n], self.dst[:n],
                      self.payload_bytes[:n], self.n_ports, self.link_gbps)
 
+    # ------------------------------------------------------------ persistence
+    def save(self, path) -> None:
+        """Write the trace as a ``.npz`` archive (lossless, pickle-free).
+
+        Saved traces are what ``repro.api.TraceSpec(path=...)`` references, so
+        a captured trace is a first-class scenario input alongside the named
+        generators."""
+        np.savez_compressed(
+            path,
+            time_s=self.time_s, src=self.src, dst=self.dst,
+            payload_bytes=self.payload_bytes,
+            meta_name=np.asarray(self.name),
+            meta_n_ports=np.asarray(self.n_ports, np.int64),
+            meta_link_gbps=np.asarray(self.link_gbps, np.float64),
+        )
+
+    @classmethod
+    def load(cls, path) -> "Trace":
+        """Inverse of :meth:`save`; round-trips every field exactly."""
+        with np.load(path, allow_pickle=False) as z:
+            return cls(
+                name=str(z["meta_name"][()]),
+                time_s=z["time_s"], src=z["src"], dst=z["dst"],
+                payload_bytes=z["payload_bytes"],
+                n_ports=int(z["meta_n_ports"][()]),
+                link_gbps=float(z["meta_link_gbps"][()]),
+            )
+
 
 def merge(name: str, traces, n_ports: int, link_gbps: float = 100.0) -> Trace:
     return Trace(
