@@ -1,9 +1,13 @@
-"""Stage-2 DSE fan-out throughput: batched JAX engine vs the serial loop.
+"""DSE fan-out throughput: the batched JAX engines vs the serial loops.
 
-Measures candidates/sec over a 64-candidate sweep on the hft trace, checks
-the >= 5x acceptance bar, cross-checks that ``run_dse`` produces the
-identical Pareto front through either stage-2 path, and reports aggregate
-campaign-level stage-2 throughput over three registry scenarios.
+Stage 2: candidates/sec over a 64-candidate sweep on the hft trace through
+the batched surrogate engine (>= 5x acceptance bar).  Stage 4: the same 64
+candidates, stage-3-sized from the surrogate occupancy samples, through the
+batched finite-buffer verifier vs the serial heapq loop (>= 3x bar), with
+exact drop-count parity checked on the measured runs.  Cross-checks that
+``run_dse`` produces the identical Pareto front through either path at both
+stages, and reports aggregate campaign-level stage-2 and stage-4 (verify)
+throughput over three registry scenarios.
 
     python -m benchmarks.dse_throughput
 """
@@ -16,10 +20,11 @@ from .common import emit
 def run():
     from repro.core import (ArchRequest, ResourceBudget, SLA, bind,
                             compressed_protocol, enumerate_candidates, run_dse)
-    from repro.core.dse import DSEProblem
-    from repro.sim import run_surrogate, run_surrogate_batched
+    from repro.core.dse import DSEProblem, depth_for_drop_rate
+    from repro.sim import (run_netsim, run_netsim_batched, run_surrogate,
+                           run_surrogate_batched)
     from repro.sim.resources import ALVEO_U45N
-    from repro.sim.switch_problem import SwitchDSEProblem
+    from repro.sim.switch_problem import SwitchDSEProblem, align_depth_to_bram
     from repro.traces import hft
 
     bound = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
@@ -43,11 +48,11 @@ def run():
     cps_b = len(cands) / t_batched
     cps_s = len(cands) / t_serial
     speedup = t_serial / t_batched
-    emit("dse_throughput/batched", t_batched * 1e6 / len(cands),
+    emit("dse_throughput/stage2_batched", t_batched * 1e6 / len(cands),
          f"{cps_b:.0f} cand/s over {len(tr)} pkts")
-    emit("dse_throughput/serial", t_serial * 1e6 / len(cands),
+    emit("dse_throughput/stage2_serial", t_serial * 1e6 / len(cands),
          f"{cps_s:.0f} cand/s")
-    emit("dse_throughput/speedup", 0.0,
+    emit("dse_throughput/stage2_speedup", 0.0,
          f"{speedup:.1f}x ({'PASS' if speedup >= 5.0 else 'FAIL'} >=5x bar)")
 
     # parity spot check on the measured runs
@@ -56,9 +61,40 @@ def run():
                 for rb, rs in zip(batch.results(), serial))
     emit("dse_throughput/occupancy_exact", 0.0, str(exact))
 
-    # full-pipeline consistency: identical Pareto front either way
+    # ---- stage 4: size the same 64 candidates from the batched occupancy
+    # samples (the exact stage-3 recipe) and verify batched vs serial heapq
+    sized = [a.with_depth(align_depth_to_bram(
+                 int(depth_for_drop_rate(sr.q_occupancy, 1e-3) * 1.25) + 1,
+                 a.bus_bits))
+             for a, sr in zip(cands, batch.results())]
+    run_netsim_batched(sized, bound, tr, back_annotation=False)   # warm jit
+    run_netsim(sized[0], bound, tr, back_annotation=False)
+
+    t0 = time.perf_counter()
+    vb = run_netsim_batched(sized, bound, tr, back_annotation=False)
+    t4_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vserial = [run_netsim(a, bound, tr, back_annotation=False) for a in sized]
+    t4_serial = time.perf_counter() - t0
+
+    speedup4 = t4_serial / t4_batched
+    fallbacks = sum(v.meta.get("shared_cap_fallback", False) for v in vb)
+    emit("dse_throughput/stage4_batched", t4_batched * 1e6 / len(sized),
+         f"{len(sized) / t4_batched:.0f} cand/s verify "
+         f"({fallbacks} shared-cap fallbacks)")
+    emit("dse_throughput/stage4_serial", t4_serial * 1e6 / len(sized),
+         f"{len(sized) / t4_serial:.0f} cand/s")
+    emit("dse_throughput/stage4_speedup", 0.0,
+         f"{speedup4:.1f}x ({'PASS' if speedup4 >= 3.0 else 'FAIL'} >=3x bar)")
+    drops_exact = all(b.drop_rate == s.drop_rate
+                      for b, s in zip(vb, vserial))
+    emit("dse_throughput/stage4_drops_exact", 0.0, str(drops_exact))
+
+    # full-pipeline consistency: identical Pareto front whichever pair of
+    # engines (batched or serial, both stages) ran
     class SerialProblem(SwitchDSEProblem):
         surrogate_batch = DSEProblem.surrogate_batch
+        verify_batch = DSEProblem.verify_batch
 
     sla = SLA(p99_latency_ns=5000, drop_rate=1e-3)
     budget = ResourceBudget(dict(ALVEO_U45N))
@@ -72,18 +108,37 @@ def run():
     emit("dse_throughput/pareto_identical", 0.0, str(same))
 
     # campaign-level fan-out: every scenario's stage-2 candidates through the
-    # batched engine, aggregate candidates/sec across the whole campaign
+    # batched surrogate and every sized survivor through the batched verifier,
+    # aggregate candidates/sec across the whole campaign at both stages
     from repro.api import registry, run_campaign
     scenarios = [registry[n].override(back_annotation=False)
                  for n in ("hft", "underwater", "industry")]
     campaign = run_campaign(scenarios, name="bench")
-    emit("dse_throughput/campaign", campaign.stage2_time_s * 1e6,
+    emit("dse_throughput/campaign_stage2", campaign.stage2_time_s * 1e6,
          f"{len(campaign.reports)} scenarios; {campaign.stage2_candidates} "
          f"stage-2 candidates in {campaign.stage2_batches} batched calls; "
          f"{campaign.stage2_cands_per_sec:.0f} cand/s aggregate")
-    return {"speedup": speedup, "pareto_identical": same,
-            "occupancy_exact": exact,
-            "campaign_cands_per_sec": campaign.stage2_cands_per_sec}
+    emit("dse_throughput/campaign_verify", campaign.stage4_time_s * 1e6,
+         f"{campaign.stage4_candidates} sized candidates in "
+         f"{campaign.stage4_batches} batched calls; "
+         f"{campaign.stage4_cands_per_sec:.0f} cand/s verify aggregate")
+    return {
+        "stage2_speedup": float(speedup),
+        "stage2_cands_per_sec": float(cps_b),
+        "stage4_speedup": float(speedup4),
+        "stage4_cands_per_sec": float(len(sized) / t4_batched),
+        "stage4_shared_cap_fallbacks": int(fallbacks),
+        "occupancy_exact": bool(exact),
+        "stage4_drops_exact": bool(drops_exact),
+        "pareto_identical": bool(same),
+        "campaign_stage2_cands_per_sec": float(campaign.stage2_cands_per_sec),
+        "campaign_verify_cands_per_sec": float(campaign.stage4_cands_per_sec),
+        "campaign_wall_s": float(campaign.wall_time_s),
+        "scenario_wall_s": {r.scenario.name: float(r.wall_time_s)
+                           for r in campaign.reports},
+        "pareto_sizes": {r.scenario.name: len(r.pareto)
+                        for r in campaign.reports},
+    }
 
 
 if __name__ == "__main__":

@@ -2,12 +2,19 @@
 microbench and the dry-run roofline table.
 
 Emits ``name,us_per_call,derived`` CSV rows (derived strings use ';'
-separators so the CSV stays 3 columns).
+separators so the CSV stays 3 columns).  With ``--json [PATH]`` the suites'
+structured returns are also written as one machine-readable file (default
+``BENCH_dse.json``) — stage-2/stage-4 candidates/sec, end-to-end scenario
+wall-clock and Pareto sizes from ``dse_throughput`` — so the performance
+trajectory is diffable across commits (CI uploads it as an artifact).
 
-    python -m benchmarks.run            # everything (pip install -e . once)
+    python -m benchmarks.run                      # everything (pip install -e . once)
     python -m benchmarks.run fig7 table2
+    python -m benchmarks.run --json dse_throughput
+    python -m benchmarks.run --json bench.json dse_throughput
 """
 
+import json
 import sys
 import time
 import traceback
@@ -28,20 +35,54 @@ SUITES = {
     "dse_throughput": dse_throughput.run,
 }
 
+DEFAULT_JSON = "BENCH_dse.json"
+
+
+def _jsonable(obj):
+    """Best-effort scalarisation so numpy types survive json.dump."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    if hasattr(obj, "item"):          # numpy scalar
+        return obj.item()
+    return str(obj)
+
 
 def main() -> None:
-    wanted = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    argv = list(sys.argv[1:])
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        argv.pop(i)
+        json_path = DEFAULT_JSON
+        if i < len(argv) and argv[i] not in SUITES and not argv[i].startswith("-"):
+            json_path = argv.pop(i)
+    wanted = [a for a in argv if a in SUITES] or list(SUITES)
     print("name,us_per_call,derived")
-    failures = 0
+    failures = []
+    results = {}
+    wall = {}
     for name in wanted:
         t0 = time.time()
         try:
-            SUITES[name]()
-            print(f"{name}/TOTAL,{(time.time() - t0) * 1e6:.0f},ok")
+            out = SUITES[name]()
+            if isinstance(out, dict):
+                results[name] = _jsonable(out)
+            wall[name] = time.time() - t0
+            print(f"{name}/TOTAL,{wall[name] * 1e6:.0f},ok")
         except Exception:  # noqa: BLE001 - keep the harness running
-            failures += 1
+            failures.append(name)
+            wall[name] = time.time() - t0
             traceback.print_exc()
-            print(f"{name}/TOTAL,{(time.time() - t0) * 1e6:.0f},FAILED")
+            print(f"{name}/TOTAL,{wall[name] * 1e6:.0f},FAILED")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"suites": results, "suite_wall_s": wall,
+                       "failures": failures}, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
     if failures:
         raise SystemExit(1)
 

@@ -114,11 +114,13 @@ def _apply_overrides(scenario, args):
         back_annotation=args.back_annotation,
         delta=args.delta,
         top_k=args.top_k,
+        verify_engine=args.verify_engine,
         flit_bits=args.flit_bits,
     )
 
 
 def _add_override_flags(p: argparse.ArgumentParser) -> None:
+    from repro.core.dse import VERIFY_ENGINES
     g = p.add_argument_group("scenario overrides")
     g.add_argument("--sla-p99-ns", type=float, default=None,
                    help="p99 latency SLA in ns")
@@ -140,6 +142,11 @@ def _add_override_flags(p: argparse.ArgumentParser) -> None:
                    help="stage-1 timing slack")
     g.add_argument("--back-annotation", action=argparse.BooleanOptionalAction,
                    default=None, help="eta from cycle sim (slow) vs analytic")
+    g.add_argument("--verify-engine", choices=VERIFY_ENGINES,
+                   default=None,
+                   help="stage-4 fidelity rung: batched netsim (default), "
+                        "cycle-accurate datapath for every survivor, or "
+                        "auto (netsim front + cycle-sim champion)")
 
 
 def build_parser() -> argparse.ArgumentParser:

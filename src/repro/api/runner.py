@@ -8,12 +8,13 @@ Algorithm 1 with the scenario's SLA/budget/fidelity.  The legacy wrappers
 remain as thin compatibility shims over the same machinery.
 
 ``run_campaign`` exploits the staged DSE (``repro.core.dse``): it prunes
-every scenario (stage 1), then fans *all* scenarios' surviving candidates
-through the batched surrogate engine — scenarios that share a trace and a
-bound protocol share one jitted batched call, and every scenario reuses a
-cached trace + feature analysis — before finishing stages 3/4 per scenario.
-The campaign report carries aggregate stage-2 throughput (candidates/sec
-across the whole campaign), the figure of merit PR 1's engine optimises.
+every scenario (stage 1), fans *all* scenarios' surviving candidates through
+the batched surrogate engine (stage 2), sizes each scenario's survivors
+(stage 3), then fans *all* scenarios' sized candidates through the batched
+stage-4 verifier — at both batched stages, scenarios that share a trace and
+a bound protocol share one jitted call, and every scenario reuses a cached
+trace + feature analysis.  The campaign report carries aggregate stage-2
+*and* stage-4 throughput (candidates/sec across the whole campaign).
 """
 
 from __future__ import annotations
@@ -27,7 +28,7 @@ from repro.core.binding import BoundProtocol, bind
 from repro.core.dse import (DSEProblem, DSEResult, ResourceBudget, SLA,
                             StageLog, SurrogateResult, VerifyResult,
                             finalize_result, stage1_static, stage2_screen,
-                            stage3_verify)
+                            stage3_size, stage4_verify)
 
 from .registry import registry
 from .scenario import Scenario
@@ -96,7 +97,8 @@ def build_problem(
     problem = SwitchDSEProblem(
         scenario.arch, bound, tr,
         back_annotation=scenario.fidelity.back_annotation,
-        features=features)
+        features=features,
+        verify_engine=scenario.fidelity.verify_engine)
     return problem, scenario.sla, budget
 
 
@@ -130,6 +132,8 @@ class ScenarioReport:
     wall_time_s: float
     stage2_candidates: int = 0
     stage2_time_s: float = 0.0
+    stage4_candidates: int = 0
+    stage4_time_s: float = 0.0
 
     @property
     def best(self) -> Optional[Any]:
@@ -178,12 +182,16 @@ class ScenarioReport:
             ],
             "n_verified": len(self.result.evaluated),
             "wall_time_s": self.wall_time_s,
+            "stage2_candidates": self.stage2_candidates,
+            "stage2_time_s": self.stage2_time_s,
+            "stage4_candidates": self.stage4_candidates,
+            "stage4_time_s": self.stage4_time_s,
         }
 
 
 @dataclasses.dataclass
 class CampaignReport:
-    """Per-scenario reports + aggregate batched stage-2 throughput."""
+    """Per-scenario reports + aggregate batched stage-2/4 throughput."""
 
     name: str
     reports: List[ScenarioReport]
@@ -192,10 +200,17 @@ class CampaignReport:
     stage2_batches: int
     shared_trace_scenarios: int      # scenarios that reused a cached trace
     wall_time_s: float
+    stage4_candidates: int = 0
+    stage4_time_s: float = 0.0
+    stage4_batches: int = 0
 
     @property
     def stage2_cands_per_sec(self) -> float:
         return self.stage2_candidates / max(self.stage2_time_s, 1e-12)
+
+    @property
+    def stage4_cands_per_sec(self) -> float:
+        return self.stage4_candidates / max(self.stage4_time_s, 1e-12)
 
     def __getitem__(self, name: str) -> ScenarioReport:
         for r in self.reports:
@@ -217,6 +232,10 @@ class CampaignReport:
             f"{self.stage2_batches} batched calls, {self.stage2_time_s*1e3:.1f}ms "
             f"({self.stage2_cands_per_sec:.0f} cand/s aggregate; "
             f"{self.shared_trace_scenarios} scenario(s) shared a trace)")
+        lines.append(
+            f"  stage-4 fan-out: {self.stage4_candidates} sized candidates in "
+            f"{self.stage4_batches} batched calls, {self.stage4_time_s*1e3:.1f}ms "
+            f"({self.stage4_cands_per_sec:.0f} cand/s verify aggregate)")
         return "\n".join(lines)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -227,6 +246,10 @@ class CampaignReport:
             "stage2_time_s": self.stage2_time_s,
             "stage2_cands_per_sec": self.stage2_cands_per_sec,
             "stage2_batches": self.stage2_batches,
+            "stage4_candidates": self.stage4_candidates,
+            "stage4_time_s": self.stage4_time_s,
+            "stage4_cands_per_sec": self.stage4_cands_per_sec,
+            "stage4_batches": self.stage4_batches,
             "shared_trace_scenarios": self.shared_trace_scenarios,
             "wall_time_s": self.wall_time_s,
         }
@@ -258,15 +281,22 @@ def run_scenario(scenario: Union[Scenario, str], *, verbose: bool = False) -> Sc
     valid, log2 = stage2_screen(problem, active, sla, surrogates=srs)
     if verbose:
         print(log2)
-    evaluated, best, best_v, log3 = stage3_verify(problem, valid, sla, budget,
-                                                  top_k=fid.top_k)
+    sized, n_explored = stage3_size(problem, valid, sla, budget, top_k=fid.top_k)
+    t4 = time.perf_counter()
+    verifies = problem.verify_batch([a for a, _ in sized])
+    stage4_time = time.perf_counter() - t4
+    evaluated, best, best_v = stage4_verify(problem, sized, sla,
+                                            verifies=verifies)
+    log3 = StageLog("stage3-sizing+verify", n_explored, len(sized))
     if verbose:
         print(log3)
     result = finalize_result(problem, evaluated, best, best_v, [log1, log2, log3])
     return ScenarioReport(scenario=scenario, result=result, problem=problem,
                           wall_time_s=time.perf_counter() - t0,
                           stage2_candidates=len(active),
-                          stage2_time_s=stage2_time)
+                          stage2_time_s=stage2_time,
+                          stage4_candidates=len(sized),
+                          stage4_time_s=stage4_time)
 
 
 @dataclasses.dataclass
@@ -281,6 +311,13 @@ class _Ctx:
     surrogates: List[SurrogateResult] = dataclasses.field(default_factory=list)
     stage1_time_s: float = 0.0
     stage2_time_s: float = 0.0               # this scenario's share of its batch
+    # --- stages 2-screen + 3 (sizing), filled before the stage-4 fan-out
+    log2: Optional[StageLog] = None
+    sized: List[Any] = dataclasses.field(default_factory=list)
+    n_explored: int = 0
+    stage3_time_s: float = 0.0
+    verifies: List[VerifyResult] = dataclasses.field(default_factory=list)
+    stage4_time_s: float = 0.0               # this scenario's share of its batch
 
 
 def _switch_group_key(s: Scenario) -> str:
@@ -293,6 +330,15 @@ def _switch_group_key(s: Scenario) -> str:
         "binding": s.binding,
         "back_annotation": s.fidelity.back_annotation,
     }, sort_keys=True)
+
+
+def _verify_group_key(ctx: _Ctx) -> str:
+    """Scenarios share one batched stage-4 call iff this key matches: the
+    stage-2 key plus the verify engine (sized candidates from two scenarios
+    may ride one jitted netsim scan only if the same rung verifies both)."""
+    if ctx.group_key is None:
+        return None
+    return ctx.group_key + "|" + ctx.scenario.fidelity.verify_engine
 
 
 def run_campaign(
@@ -372,25 +418,73 @@ def run_campaign(
             ctx.stage2_time_s = elapsed * len(ctx.active) / max(len(archs), 1)
             off += len(ctx.active)
 
-    # ---- stages 2-screen / 3 / 4 per scenario
+    # ---- stage-2 screening + stage-3 sizing per scenario
+    for ctx in ctxs:
+        s = ctx.scenario
+        t0 = time.perf_counter()
+        valid, ctx.log2 = stage2_screen(ctx.problem, ctx.active, s.sla,
+                                        surrogates=ctx.surrogates)
+        ctx.sized, ctx.n_explored = stage3_size(
+            ctx.problem, valid, s.sla, ctx.budget, top_k=s.fidelity.top_k)
+        ctx.stage3_time_s = time.perf_counter() - t0
+        if verbose:
+            print(f"[{s.name}] {ctx.log2}")
+
+    # ---- stage 4: fan every scenario's sized survivors through the batched
+    # verifier; scenarios sharing (trace, bound, fidelity, engine) share one
+    # jitted call, exactly as stage 2 shares the surrogate scan
+    vgroups: Dict[str, List[_Ctx]] = {}
+    vorder: List[str] = []
+    for i, ctx in enumerate(ctxs):
+        key = _verify_group_key(ctx) or f"solo-{i}"
+        if key not in vgroups:
+            vgroups[key] = []
+            vorder.append(key)
+        vgroups[key].append(ctx)
+
+    total_verifies = 0
+    stage4_time = 0.0
+    n_vbatches = 0
+    for key in vorder:
+        members = vgroups[key]
+        cands = [a for ctx in members for a, _ in ctx.sized]
+        vs: List[VerifyResult] = []
+        elapsed = 0.0
+        if cands:
+            t0 = time.perf_counter()
+            vs = members[0].problem.verify_batch(cands)
+            elapsed = time.perf_counter() - t0
+            stage4_time += elapsed
+            n_vbatches += 1
+            total_verifies += len(cands)
+        off = 0
+        for ctx in members:
+            ctx.verifies = vs[off:off + len(ctx.sized)]
+            # apportion the batched call's cost by candidate share
+            ctx.stage4_time_s = elapsed * len(ctx.sized) / max(len(cands), 1)
+            off += len(ctx.sized)
+
+    # ---- assemble per-scenario results
     reports: List[ScenarioReport] = []
     for ctx in ctxs:
         s = ctx.scenario
         t0 = time.perf_counter()
-        valid, log2 = stage2_screen(ctx.problem, ctx.active, s.sla,
-                                    surrogates=ctx.surrogates)
-        evaluated, best, best_v, log3 = stage3_verify(
-            ctx.problem, valid, s.sla, ctx.budget, top_k=s.fidelity.top_k)
+        evaluated, best, best_v = stage4_verify(ctx.problem, ctx.sized, s.sla,
+                                                verifies=ctx.verifies)
+        log3 = StageLog("stage3-sizing+verify", ctx.n_explored, len(ctx.sized))
         result = finalize_result(ctx.problem, evaluated, best, best_v,
-                                 [ctx.log1, log2, log3])
+                                 [ctx.log1, ctx.log2, log3])
         if verbose:
-            print(f"[{s.name}] {log2}\n[{s.name}] {log3}")
+            print(f"[{s.name}] {log3}")
         reports.append(ScenarioReport(
             scenario=s, result=result, problem=ctx.problem,
             wall_time_s=(ctx.stage1_time_s + ctx.stage2_time_s
+                         + ctx.stage3_time_s + ctx.stage4_time_s
                          + time.perf_counter() - t0),
             stage2_candidates=len(ctx.active),
-            stage2_time_s=ctx.stage2_time_s))
+            stage2_time_s=ctx.stage2_time_s,
+            stage4_candidates=len(ctx.sized),
+            stage4_time_s=ctx.stage4_time_s))
 
     return CampaignReport(
         name=name,
@@ -398,6 +492,9 @@ def run_campaign(
         stage2_candidates=total_cands,
         stage2_time_s=stage2_time,
         stage2_batches=n_batches,
+        stage4_candidates=total_verifies,
+        stage4_time_s=stage4_time,
+        stage4_batches=n_vbatches,
         shared_trace_scenarios=sum(c.shared_trace for c in ctxs),
         wall_time_s=time.perf_counter() - t_start,
     )

@@ -29,7 +29,7 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 from repro.core.archspec import (AUTO, ArchRequest, CustomKernelSpec,
                                  ForwardTableKind, SchedulerKind, VOQKind)
 from repro.core.binding import KNOWN_SEMANTICS, SemanticBinding
-from repro.core.dse import ResourceBudget, SLA
+from repro.core.dse import ResourceBudget, SLA, VERIFY_ENGINES
 from repro.core.dsl import (Field, Protocol, compressed_protocol,
                             ethernet_ipv4_udp)
 
@@ -272,6 +272,16 @@ class Fidelity:
     back_annotation: bool = True   # η from the cycle sim vs the analytic fits
     delta: float = 0.2             # stage-1 timing slack
     top_k: int = 8                 # stage-3 exploration width
+    #: stage-4 rung on the fidelity ladder: "netsim" verifies every sized
+    #: survivor with the batched finite-buffer event sim; "cycle" runs the
+    #: cycle-accurate datapath for every survivor (slow); "auto" verifies the
+    #: front with batched netsim and escalates only the champion to cycle-sim
+    verify_engine: str = "netsim"
+
+    def __post_init__(self):
+        if self.verify_engine not in VERIFY_ENGINES:
+            raise ValueError(f"unknown verify_engine {self.verify_engine!r}; "
+                             f"known: {VERIFY_ENGINES}")
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -398,6 +408,7 @@ class Scenario:
         back_annotation: Optional[bool] = None,
         delta: Optional[float] = None,
         top_k: Optional[int] = None,
+        verify_engine: Optional[str] = None,
         flit_bits: Optional[int] = None,
         name: Optional[str] = None,
     ) -> "Scenario":
@@ -428,6 +439,8 @@ class Scenario:
                              if back_annotation is None else back_annotation),
             delta=self.fidelity.delta if delta is None else delta,
             top_k=self.fidelity.top_k if top_k is None else top_k,
+            verify_engine=(self.fidelity.verify_engine
+                           if verify_engine is None else verify_engine),
         )
         return dataclasses.replace(
             self, sla=sla, trace=trace, budget=budget, fidelity=fid,

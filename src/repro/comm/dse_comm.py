@@ -184,15 +184,29 @@ class CommDSEProblem(DSEProblem):
         return {"bytes_per_device": b, "bram": b}
 
     def verify(self, c: CommSpec) -> VerifyResult:
-        """Stage 4: run the real fabric; measure the actual token-drop rate."""
-        _, aux = apply_moe(self.params, self.cfg, self.plan, self.mesh,
-                           self.sample_x, c.moe_options(self.cfg.router))
-        t = self._step_time(c)
-        return VerifyResult(
-            p99_latency_ns=t * 1e9, mean_latency_ns=t * 1e9,
-            drop_rate=float(aux["drop_frac"]),
-            throughput_gbps=self._a2a_bytes(c) * 8 / max(t, 1e-12) / 1e9,
-            meta={"expert_load": np.asarray(aux["expert_load"])})
+        """Stage 4: run the real fabric; measure the actual token-drop rate.
+        One body with the batch path so the two can never drift."""
+        return self.verify_batch([c])[0]
+
+    def verify_batch(self, cands: List[CommSpec]) -> List[VerifyResult]:
+        """Stage-4 fan-out: the analytic fabric metrics (step time, wire
+        bytes) vectorise over the whole batch in one pass; only the genuinely
+        dynamic part — dispatching through the real fabric to measure the
+        actual token-drop rate — stays per candidate."""
+        if not cands:
+            return []
+        t = self._step_time_batch(cands)
+        a2a = self._a2a_bytes_batch(cands)
+        out: List[VerifyResult] = []
+        for c, tb, ab in zip(cands, t, a2a):
+            _, aux = apply_moe(self.params, self.cfg, self.plan, self.mesh,
+                               self.sample_x, c.moe_options(self.cfg.router))
+            out.append(VerifyResult(
+                p99_latency_ns=float(tb) * 1e9, mean_latency_ns=float(tb) * 1e9,
+                drop_rate=float(aux["drop_frac"]),
+                throughput_gbps=float(ab) * 8 / max(float(tb), 1e-12) / 1e9,
+                meta={"expert_load": np.asarray(aux["expert_load"])}))
+        return out
 
     def objectives(self, c: CommSpec, v: VerifyResult) -> Tuple[float, float]:
         return (v.p99_latency_ns, self._buffer_bytes(c))

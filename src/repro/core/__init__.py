@@ -31,7 +31,9 @@ from .dse import (
     run_dse,
     stage1_static,
     stage2_screen,
+    stage3_size,
     stage3_verify,
+    stage4_verify,
 )
 from .dsl import (
     ETHERNET_HEADER_BYTES,
@@ -52,5 +54,6 @@ __all__ = [
     "SwitchArch", "TraceFeatures", "VOQKind", "VerifyResult", "analyze", "bind",
     "compressed_protocol", "depth_for_drop_rate", "enumerate_candidates",
     "ethernet_ipv4_udp", "finalize_result", "hypervolume_2d", "is_dominated",
-    "pareto_front", "run_dse", "stage1_static", "stage2_screen", "stage3_verify",
+    "pareto_front", "run_dse", "stage1_static", "stage2_screen", "stage3_size",
+    "stage3_verify", "stage4_verify",
 ]

@@ -8,7 +8,8 @@ runs the paper's four stages:
   Stage 2  Coarse profiling      surrogate w/ infinite buffers; prune on p99 SLA
   Stage 3  Statistical sizing    d_opt from queue-occupancy histogram @ ε,
                                  aligned to physical memory; prune on resources
-  Stage 4  Verification          full simulation of the sized candidate
+  Stage 4  Verification          full simulation of the sized survivors, fanned
+                                 through one ``verify_batch`` call
 
 Two concrete problems implement this interface:
   * ``repro.sim.switch_problem.SwitchDSEProblem``  — the paper's FPGA switch
@@ -28,6 +29,7 @@ from .pareto import pareto_front
 __all__ = [
     "SLA",
     "ResourceBudget",
+    "VERIFY_ENGINES",
     "SurrogateResult",
     "VerifyResult",
     "DSEProblem",
@@ -36,10 +38,21 @@ __all__ = [
     "run_dse",
     "stage1_static",
     "stage2_screen",
+    "stage3_size",
     "stage3_verify",
+    "stage4_verify",
     "finalize_result",
     "depth_for_drop_rate",
 ]
+
+
+#: stage-4 policy vocabulary — the single source of truth shared by the
+#: switch problem, the Scenario `Fidelity` spec and the CLI flag:
+#: "netsim"  — every sized survivor through the batched finite-buffer sim,
+#: "cycle"   — every survivor through the cycle-accurate datapath (slow),
+#: "auto"    — netsim for the front, cycle-sim for the champion only
+#: (via the `escalate` hook).
+VERIFY_ENGINES = ("netsim", "cycle", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +137,31 @@ class DSEProblem:
     def verify(self, cand) -> VerifyResult:
         """High-fidelity simulation of the sized candidate (stage 4)."""
         raise NotImplementedError
+
+    def verify_batch(self, cands: Sequence[Any]) -> List[VerifyResult]:
+        """Stage-4 fan-out hook: verify a whole sized-candidate batch at once.
+
+        The mirror of ``surrogate_batch`` one rung up the fidelity ladder:
+        ``stage3_verify`` sizes *all* explored candidates first, then fans the
+        sized survivors through one call here.  Results must be index-aligned
+        with ``cands``.  The default is the serial fallback (one ``verify``
+        call per candidate); problems with a batched verifier override it —
+        the switch problem runs the finite-buffer event simulator as one
+        jitted scan with sized VOQ depths as a batch axis
+        (``repro.sim.batched_netsim``), the comm problem vectorises its
+        analytic fabric metrics."""
+        return [self.verify(c) for c in cands]
+
+    def escalate(self, cand, v: VerifyResult) -> Optional[VerifyResult]:
+        """Optional champion escalation to a higher fidelity rung.
+
+        Called once per DSE with the winning (candidate, verify) pair; a
+        problem may re-verify the champion on a more faithful engine (e.g.
+        the cycle-accurate datapath under ``verify_engine="auto"``) and
+        return that result — it is attached as ``meta["escalated"]`` on the
+        champion's verify, never replacing the ranking metrics (so the
+        Pareto front is engine-independent).  Default: no escalation."""
+        return None
 
     def objectives(self, cand, verify: VerifyResult) -> Tuple[float, float]:
         """(latency, primary-resource) pair for ranking/Pareto (minimise both)."""
@@ -215,19 +253,21 @@ def stage2_screen(
     return valid, StageLog("stage2-surrogate", len(active), len(valid))
 
 
-def stage3_verify(
+def stage3_size(
     problem: DSEProblem,
     valid: Sequence[Tuple[Any, SurrogateResult]],
     sla: SLA,
     budget: ResourceBudget,
     *,
     top_k: int = 8,
-) -> Tuple[List[Tuple[Any, VerifyResult, Dict[str, float], bool]],
-           Optional[Any], Optional[VerifyResult], StageLog]:
-    """Stages 3+4: statistical sizing, resource pruning, full verification.
+) -> Tuple[List[Tuple[Any, Dict[str, float]]], int]:
+    """Stage 3 alone: exploration, statistical sizing, resource pruning.
 
     TopKLatency: explore the K best candidates by surrogate p99, plus the
-    best of each architecture family (diversity-preserving).
+    best of each architecture family (diversity-preserving).  Every explored
+    candidate is sized from its occupancy histogram and priced; survivors of
+    the budget come back as index-stable ``(sized, resources)`` pairs so the
+    whole batch can fan through one ``verify_batch`` call.
     """
     valid = sorted(valid, key=lambda av: av[1].p(99))
     explored = list(valid[: top_k if top_k > 0 else len(valid)])
@@ -240,26 +280,72 @@ def stage3_verify(
     for a, sr in families.values():
         if id(a) not in seen_keys:
             explored.append((a, sr))
+    sized: List[Tuple[Any, Dict[str, float]]] = []
+    for a, sr in explored:
+        s = problem.size_buffers(a, sr.q_occupancy, sla.drop_rate)
+        if s is None:
+            continue
+        res = problem.resources(s)
+        if not budget.admits(res):
+            continue
+        sized.append((s, res))
+    return sized, len(explored)
+
+
+def stage4_verify(
+    problem: DSEProblem,
+    sized: Sequence[Tuple[Any, Dict[str, float]]],
+    sla: SLA,
+    *,
+    verifies: Optional[Sequence[VerifyResult]] = None,
+) -> Tuple[List[Tuple[Any, VerifyResult, Dict[str, float], bool]],
+           Optional[Any], Optional[VerifyResult]]:
+    """Stage 4: fan the sized survivors through one ``verify_batch`` call.
+
+    ``verifies`` lets a caller inject precomputed verification results
+    (index-aligned with ``sized``) — the campaign runner uses this to batch
+    stage 4 across scenarios sharing a (trace, bound protocol, engine)
+    exactly as it already batches stage 2.  The champion is escalated via
+    ``problem.escalate`` (a no-op by default)."""
+    cands = [a for a, _ in sized]
+    vs = list(verifies) if verifies is not None else problem.verify_batch(cands)
+    if len(vs) != len(cands):
+        raise ValueError(
+            f"verify_batch returned {len(vs)} results for {len(cands)} "
+            "candidates; results must be index-aligned")
     evaluated: List[Tuple[Any, VerifyResult, Dict[str, float], bool]] = []
     best: Optional[Any] = None
     best_v: Optional[VerifyResult] = None
-    sized_ok = 0
-    for a, sr in explored:
-        sized = problem.size_buffers(a, sr.q_occupancy, sla.drop_rate)
-        if sized is None:
-            continue
-        res = problem.resources(sized)
-        if not budget.admits(res):
-            continue
-        sized_ok += 1
-        # -------------------------------------------------- Stage 4: verification
-        v = problem.verify(sized)
+    for (a, res), v in zip(sized, vs):
         feasible = v.meets(sla)
-        evaluated.append((sized, v, res, feasible))
+        evaluated.append((a, v, res, feasible))
         if feasible:
-            if best_v is None or problem.objectives(sized, v) < problem.objectives(best, best_v):
-                best, best_v = sized, v
-    return evaluated, best, best_v, StageLog("stage3-sizing+verify", len(explored), sized_ok)
+            if best_v is None or problem.objectives(a, v) < problem.objectives(best, best_v):
+                best, best_v = a, v
+    if best is not None:
+        esc = problem.escalate(best, best_v)
+        if esc is not None:
+            best_v.meta["escalated"] = esc
+    return evaluated, best, best_v
+
+
+def stage3_verify(
+    problem: DSEProblem,
+    valid: Sequence[Tuple[Any, SurrogateResult]],
+    sla: SLA,
+    budget: ResourceBudget,
+    *,
+    top_k: int = 8,
+    verifies: Optional[Sequence[VerifyResult]] = None,
+) -> Tuple[List[Tuple[Any, VerifyResult, Dict[str, float], bool]],
+           Optional[Any], Optional[VerifyResult], StageLog]:
+    """Stages 3+4 composed: size all explored candidates, then verify the
+    sized survivors in one batch (see ``stage3_size`` / ``stage4_verify``)."""
+    sized, n_explored = stage3_size(problem, valid, sla, budget, top_k=top_k)
+    evaluated, best, best_v = stage4_verify(problem, sized, sla,
+                                            verifies=verifies)
+    return evaluated, best, best_v, StageLog("stage3-sizing+verify",
+                                             n_explored, len(sized))
 
 
 def finalize_result(

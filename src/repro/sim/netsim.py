@@ -12,6 +12,11 @@ The switch is a "SPAC Port Device" node modelling forwarding-table lookup,
 finite VOQ buffering (drops!) and scheduling, parameterised by hardware
 back-annotation (fclk, pipeline depth, η) so results reflect the generated
 hardware.  This is the DSE's stage-4 verifier and the Table II harness.
+
+``run_netsim`` is the serial reference (one heapq replay per candidate); the
+batched fan-out lives in ``repro.sim.batched_netsim`` and shares the
+``service_times`` / ``switch_arrival_times`` helpers below so the two paths
+cannot drift numerically.
 """
 
 from __future__ import annotations
@@ -28,7 +33,7 @@ from repro.core.binding import BoundProtocol
 from repro.core.dse import VerifyResult
 from .backannotate import HardwareParams, annotate
 
-__all__ = ["NetSimConfig", "run_netsim"]
+__all__ = ["NetSimConfig", "run_netsim", "service_times", "switch_arrival_times"]
 
 
 @dataclasses.dataclass
@@ -39,23 +44,62 @@ class NetSimConfig:
     max_retries: int = 3
 
 
+def service_times(
+    arch: SwitchArch, hw: HardwareParams, wire: np.ndarray, link_bps: float,
+) -> Tuple[np.ndarray, float]:
+    """Per-packet output occupancy + pipeline latency for one candidate.
+
+    The occupancy is the slower of the switch datapath and the egress link;
+    matching efficiency η caps the sustainable egress rate (a scheduler that
+    matches 76% of slots delivers at most 0.76×line rate).  One home for the
+    formula: both the serial verifier and the batched engine call this, so
+    their service times are bit-identical.
+    """
+    fclk = hw.fclk_hz
+    flit_bytes = arch.bus_bits // 8
+    size_flits = np.maximum(1, -(-wire // flit_bytes))
+    svc_switch = size_flits / fclk + hw.ingress_stall_cycles / fclk
+    svc_egress = wire * 8 / (link_bps * hw.eta)
+    svc = np.maximum(svc_switch / hw.eta, svc_egress)
+    pipe_s = (hw.pipeline_cycles + hw.arb_cycles) / fclk
+    return svc, pipe_s
+
+
+def switch_arrival_times(
+    t0: np.ndarray, src: np.ndarray, wire: np.ndarray, link_bps: float,
+    prop_delay_s: float, n_ports: int,
+) -> np.ndarray:
+    """Host stack + NIC model: serialise each packet onto its source's link in
+    generation order, then propagate.  Candidate-independent — the batched
+    verifier computes this once and shares the event timeline across the
+    whole batch."""
+    host_free = np.zeros(n_ports)
+    arr = np.empty(t0.size, np.float64)
+    for k in np.argsort(t0, kind="stable"):
+        start = max(t0[k], host_free[src[k]])
+        tx = wire[k] * 8 / link_bps
+        host_free[src[k]] = start + tx
+        arr[k] = start + tx + prop_delay_s
+    return arr
+
+
 def run_netsim(
     arch: SwitchArch,
     bound: BoundProtocol,
     trace,
     *,
     hw: Optional[HardwareParams] = None,
-    cfg: NetSimConfig = NetSimConfig(),
+    cfg: Optional[NetSimConfig] = None,
     back_annotation: bool = True,
     i_burst: float = 1.0,
 ) -> VerifyResult:
+    if cfg is None:
+        cfg = NetSimConfig()     # per call: NetSimConfig is mutable
     if hw is None:
         hw = annotate(arch, bound, source="cycle_sim" if back_annotation else "model",
                       i_burst=i_burst)
     n = arch.n_ports
-    fclk = hw.fclk_hz
     link_bps = trace.link_gbps * 1e9
-    flit_bytes = arch.bus_bits // 8
     can_retx = cfg.retransmit and bound.has("seq_no")
 
     t0 = np.asarray(trace.time_s, np.float64)
@@ -64,24 +108,12 @@ def run_netsim(
     payload = np.asarray(trace.payload_bytes, np.int64)
     m = t0.size
     wire = payload + bound.header_bytes
-    size_flits = np.maximum(1, -(-wire // flit_bytes))
-    # per-packet output occupancy: the slower of the switch datapath and the
-    # egress link; matching efficiency η caps the sustainable egress rate
-    # (a scheduler that matches 76% of slots delivers at most 0.76×line rate)
-    svc_switch = size_flits / fclk + hw.ingress_stall_cycles / fclk
-    svc_egress = wire * 8 / (link_bps * hw.eta)
-    svc = np.maximum(svc_switch / hw.eta, svc_egress)
-    pipe_s = (hw.pipeline_cycles + hw.arb_cycles) / fclk
+    svc, pipe_s = service_times(arch, hw, wire, link_bps)
 
     # host stack + NIC: serialise onto the link, then propagate
-    host_free = np.zeros(n)
-    events: List[Tuple[float, int, int]] = []  # (switch_arrival_time, seq, pkt)
-    gen_order = np.argsort(t0, kind="stable")
-    for k in gen_order:
-        start = max(t0[k], host_free[src[k]])
-        tx = wire[k] * 8 / link_bps
-        host_free[src[k]] = start + tx
-        heapq.heappush(events, (start + tx + cfg.prop_delay_s, int(k), 0))
+    arr = switch_arrival_times(t0, src, wire, link_bps, cfg.prop_delay_s, n)
+    events: List[Tuple[float, int, int]] = [(arr[k], int(k), 0) for k in range(m)]
+    heapq.heapify(events)         # pops in (switch_arrival_time, pkt) order
 
     in_free = np.zeros(n)
     out_free = np.zeros(n)
@@ -126,11 +158,12 @@ def run_netsim(
 
     done = ~np.isnan(latency)
     lat = latency[done]
-    duration = max(t_end - t0.min(), 1e-12)
+    duration = max(t_end - (float(t0.min()) if m else 0.0), 1e-12)
     return VerifyResult(
         p99_latency_ns=float(np.percentile(lat, 99)) if lat.size else math.inf,
         mean_latency_ns=float(lat.mean()) if lat.size else math.inf,
         drop_rate=drops / max(m, 1),
         throughput_gbps=delivered_bits / duration / 1e9,
-        meta={"latency_ns": lat, "delivered": int(done.sum()), "offered": int(m), "hw": hw},
+        meta={"latency_ns": lat, "delivered": int(done.sum()), "offered": int(m),
+              "hw": hw, "engine": "netsim"},
     )

@@ -19,18 +19,20 @@ from repro.core.dse import (
     ResourceBudget,
     SLA,
     SurrogateResult,
+    VERIFY_ENGINES,
     VerifyResult,
     depth_for_drop_rate,
     run_dse,
 )
 from repro.core.features import TraceFeatures, analyze
 from .backannotate import annotate
+from .batched_netsim import run_netsim_batched
 from .batched_surrogate import run_surrogate_batched
 from .netsim import NetSimConfig, run_netsim
 from .resources import ALVEO_U45N, BRAM_BITS, synthesize
 from .surrogate import run_surrogate
 
-__all__ = ["SwitchDSEProblem", "optimize_switch"]
+__all__ = ["SwitchDSEProblem", "VERIFY_ENGINES", "optimize_switch"]
 
 
 def align_depth_to_bram(d_opt: int, bus_bits: int) -> int:
@@ -49,7 +51,11 @@ class SwitchDSEProblem(DSEProblem):
         back_annotation: bool = True,
         headroom: float = 1.25,
         features: Optional[TraceFeatures] = None,
+        verify_engine: str = "netsim",
     ):
+        if verify_engine not in VERIFY_ENGINES:
+            raise ValueError(f"unknown verify_engine {verify_engine!r}; "
+                             f"known: {VERIFY_ENGINES}")
         self.request = request
         self.bound = bound
         self.trace = trace
@@ -57,6 +63,7 @@ class SwitchDSEProblem(DSEProblem):
         self.features: TraceFeatures = features if features is not None else analyze(trace)
         self.back_annotation = back_annotation
         self.headroom = headroom
+        self.verify_engine = verify_engine
 
     # ------------------------------------------------------------- stage 1
     def candidates(self) -> List[SwitchArch]:
@@ -100,9 +107,42 @@ class SwitchDSEProblem(DSEProblem):
 
     # ------------------------------------------------------------- stage 4
     def verify(self, a: SwitchArch) -> VerifyResult:
+        if self.verify_engine == "cycle":
+            from .engines import get_engine
+            return get_engine("cycle").evaluate(
+                a, self.bound, self.trace,
+                back_annotation=self.back_annotation,
+                i_burst=self.features.i_burst)
         return run_netsim(a, self.bound, self.trace,
                           back_annotation=self.back_annotation,
                           i_burst=self.features.i_burst)
+
+    def verify_batch(self, archs) -> List[VerifyResult]:
+        """Fan stage 4 out through the batched finite-buffer verifier: one
+        jitted scan over the shared event timeline with every sized VOQ depth
+        (and bus width, η, pipeline/arb cycles, stalls, f_clk) as a batch
+        axis — drop counts and latencies exact vs the serial heapq path."""
+        if not archs:
+            return []
+        if self.verify_engine == "cycle":
+            return [self.verify(a) for a in archs]     # rung 4 has no batch form
+        return run_netsim_batched(
+            list(archs), self.bound, self.trace,
+            back_annotation=self.back_annotation,
+            i_burst=self.features.i_burst)
+
+    def escalate(self, a: SwitchArch, v: VerifyResult) -> Optional[VerifyResult]:
+        """``verify_engine="auto"``: the front was verified by batched netsim;
+        climb the champion one rung to the cycle-accurate datapath.  The
+        result lands in ``meta["escalated"]`` (ranking stays netsim-based, so
+        "auto" and "netsim" produce the identical Pareto front)."""
+        if self.verify_engine != "auto":
+            return None
+        from .engines import get_engine
+        return get_engine("cycle").evaluate(
+            a, self.bound, self.trace, hw=v.meta.get("hw"),
+            back_annotation=self.back_annotation,
+            i_burst=self.features.i_burst)
 
     def objectives(self, a: SwitchArch, v: VerifyResult) -> Tuple[float, float]:
         # Table II reports *average* latency; p99 is already an SLA constraint
@@ -123,6 +163,7 @@ def optimize_switch(
     back_annotation: bool = True,
     delta: float = 0.2,
     top_k: int = 8,
+    verify_engine: str = "netsim",
     verbose: bool = False,
 ):
     """One-call wrapper: trace in, Pareto-optimal switch out (Table II flow).
@@ -132,7 +173,9 @@ def optimize_switch(
     the same (request, protocol, trace, SLA, budget) bundle as a serializable
     config, and ``run_scenario`` runs exactly this path underneath.
     """
-    problem = SwitchDSEProblem(request, bound, trace, back_annotation=back_annotation)
+    problem = SwitchDSEProblem(request, bound, trace,
+                               back_annotation=back_annotation,
+                               verify_engine=verify_engine)
     sla = sla or SLA(p99_latency_ns=math.inf, drop_rate=1e-3)
     budget = budget or ResourceBudget(dict(ALVEO_U45N))
     result = run_dse(problem, sla, budget, delta=delta, top_k=top_k, verbose=verbose)

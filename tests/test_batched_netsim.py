@@ -1,0 +1,205 @@
+"""Batched finite-buffer verifier vs the serial heapq oracle (stage-4 fan-out).
+
+Acceptance contract: on the same sized candidates + trace the two paths must
+agree *exactly* on drop counts (at several sized depths, both VOQ kinds, hft
+and datacenter workloads), within rtol 1e-3 on p50/p99 latency, and on
+throughput — and ``run_dse`` must produce the same Pareto front and best
+candidate through either stage-4 path.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ArchRequest, ForwardTableKind, ResourceBudget, SLA,
+                        SchedulerKind, SwitchArch, VOQKind, bind,
+                        compressed_protocol, enumerate_candidates, run_dse)
+from repro.core.dse import DSEProblem
+from repro.sim import run_netsim, run_netsim_batched
+from repro.sim.netsim import NetSimConfig
+from repro.sim.resources import ALVEO_U45N
+from repro.sim.switch_problem import SwitchDSEProblem
+from repro.traces import datacenter, hft
+from repro.traces.base import Trace
+
+BOUND = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
+
+
+def _traces():
+    return {
+        "hft": hft(seed=0),
+        "datacenter": datacenter(seed=0, n_ports=8, duration_s=400e-6, load=0.8),
+    }
+
+
+def _sized_candidates():
+    """Every (bus, fwd, voq, sched) family at several sized depths — small
+    depths force drops so the exact-drop assertion has teeth."""
+    base = enumerate_candidates(ArchRequest(n_ports=8, addr_bits=4))
+    assert {a.voq for a in base} == {VOQKind.NXN, VOQKind.SHARED}
+    return [a.with_depth(d) for a in base[:12] for d in (2, 8, 64)]
+
+
+@pytest.mark.parametrize("workload", ["hft", "datacenter"])
+def test_batched_matches_heapq_oracle(workload):
+    tr = _traces()[workload]
+    cands = _sized_candidates()
+    vb = run_netsim_batched(cands, BOUND, tr, back_annotation=False)
+    vs = [run_netsim(a, BOUND, tr, back_annotation=False) for a in cands]
+    assert any(v.drop_rate > 0 for v in vs)     # the depths actually bind
+    for a, b, s in zip(cands, vb, vs):
+        msg = a.short()
+        # drop counts exact (drop_rate is drops/m, m shared)
+        assert b.drop_rate == s.drop_rate, msg
+        assert b.meta["delivered"] == s.meta["delivered"], msg
+        # the delivered latency array is bit-identical, packet order included
+        np.testing.assert_array_equal(b.meta["latency_ns"],
+                                      s.meta["latency_ns"], err_msg=msg)
+        for q, sq in ((b.p99_latency_ns, s.p99_latency_ns),
+                      (b.mean_latency_ns, s.mean_latency_ns)):
+            assert q == pytest.approx(sq, rel=1e-3), msg
+        assert b.throughput_gbps == pytest.approx(s.throughput_gbps, rel=1e-6), msg
+
+
+def test_shared_cap_fallback_is_exact():
+    """An incast pattern that fills many VOQs part-way crosses the shared
+    N·depth cap before any per-queue depth binds — those candidates must take
+    the flagged serial fallback and still match the oracle exactly."""
+    n = 8
+    rng = np.random.default_rng(0)
+    per_src = 120
+    times = np.concatenate([np.arange(per_src) * 2.2e-7 + s * 1e-9
+                            for s in range(n)])
+    srcs = np.concatenate([np.full(per_src, s) for s in range(n)])
+    dsts = np.concatenate([rng.integers(0, 4, per_src) for _ in range(n)])
+    tr = Trace("incast4", times, srcs, dsts, np.full(n * per_src, 200), n,
+               link_gbps=10.0)
+    cands = [SwitchArch(n_ports=8, bus_bits=bw, fwd=ForwardTableKind.FULL_LOOKUP,
+                        voq=voq, sched=SchedulerKind.RR, voq_depth=d, addr_bits=4)
+             for bw in (128, 512)
+             for voq in (VOQKind.SHARED, VOQKind.NXN) for d in (8, 16)]
+    vb = run_netsim_batched(cands, BOUND, tr, back_annotation=False)
+    vs = [run_netsim(a, BOUND, tr, back_annotation=False) for a in cands]
+    fallbacks = [v.meta.get("shared_cap_fallback", False) for v in vb]
+    assert any(fallbacks)                        # the cap genuinely binds
+    assert not any(f for f, a in zip(fallbacks, cands)
+                   if a.voq is VOQKind.NXN)      # ...and only for SHARED
+    for b, s in zip(vb, vs):
+        assert b.drop_rate == s.drop_rate
+        np.testing.assert_array_equal(b.meta["latency_ns"],
+                                      s.meta["latency_ns"])
+
+
+def test_degenerate_depth_matches_serial():
+    """depth<=0 means "always full" in the serial model (every packet drops);
+    the batched path must route such candidates through the flagged serial
+    fallback rather than silently diverge."""
+    tr = hft(seed=0).head(64)
+    cands = [_sized_candidates()[0].with_depth(0),
+             _sized_candidates()[1].with_depth(8)]
+    vb = run_netsim_batched(cands, BOUND, tr, back_annotation=False)
+    vs = [run_netsim(a, BOUND, tr, back_annotation=False) for a in cands]
+    assert vb[0].meta["fallback"] == "degenerate_depth"
+    assert "fallback" not in vb[1].meta
+    for b, s in zip(vb, vs):
+        assert b.drop_rate == s.drop_rate
+        np.testing.assert_array_equal(b.meta["latency_ns"], s.meta["latency_ns"])
+    assert vs[0].drop_rate == 1.0
+
+
+def test_empty_trace():
+    empty = Trace("empty", np.zeros(0), np.zeros(0, np.int32),
+                  np.zeros(0, np.int32), np.zeros(0, np.int64), 8)
+    cands = _sized_candidates()[:4]
+    vb = run_netsim_batched(cands, BOUND, empty, back_annotation=False)
+    vs = run_netsim(cands[0], BOUND, empty, back_annotation=False)
+    assert len(vb) == 4
+    for v in vb:
+        assert v.drop_rate == vs.drop_rate == 0.0
+        assert v.throughput_gbps == vs.throughput_gbps == 0.0
+        assert math.isinf(v.p99_latency_ns) and math.isinf(vs.p99_latency_ns)
+
+
+def test_empty_batch():
+    assert run_netsim_batched([], BOUND, hft(seed=0)) == []
+
+
+def test_single_candidate():
+    tr = hft(seed=1)
+    a = _sized_candidates()[0]
+    [vb] = run_netsim_batched([a], BOUND, tr, back_annotation=False)
+    vs = run_netsim(a, BOUND, tr, back_annotation=False)
+    assert vb.drop_rate == vs.drop_rate
+    np.testing.assert_array_equal(vb.meta["latency_ns"], vs.meta["latency_ns"])
+
+
+def test_mixed_port_batches_are_partitioned():
+    tr = hft(seed=0)
+    mixed = ([a.with_depth(4) for a in
+              enumerate_candidates(ArchRequest(n_ports=8, addr_bits=4))[:3]]
+             + [a.with_depth(4) for a in
+                enumerate_candidates(ArchRequest(n_ports=4, addr_bits=4))[:3]])
+    vb = run_netsim_batched(mixed, BOUND, tr, back_annotation=False)
+    for a, b in zip(mixed, vb):
+        s = run_netsim(a, BOUND, tr, back_annotation=False)
+        assert b.drop_rate == s.drop_rate
+        np.testing.assert_array_equal(b.meta["latency_ns"], s.meta["latency_ns"])
+
+
+def test_retransmit_stays_serial():
+    proto = compressed_protocol(addr_bits=4, seq_bits=8)
+    bound_seq = bind(proto, flit_bits=256)
+    with pytest.raises(NotImplementedError, match="retransmission"):
+        run_netsim_batched(_sized_candidates()[:2], bound_seq, hft(seed=0),
+                           cfg=NetSimConfig(retransmit=True),
+                           back_annotation=False)
+
+
+def test_misaligned_hw_list_raises():
+    with pytest.raises(ValueError, match="index-aligned"):
+        run_netsim_batched(_sized_candidates()[:4], BOUND, hft(seed=0),
+                           hw=[None, None])
+
+
+def test_mutable_default_config_fixed():
+    """``run_netsim(..., cfg=None)`` must build a fresh NetSimConfig per call
+    rather than sharing one mutable default instance across all calls."""
+    import inspect
+    for fn in (run_netsim, run_netsim_batched):
+        assert inspect.signature(fn).parameters["cfg"].default is None, fn
+
+
+def test_verify_batch_misalignment_raises():
+    class Broken(SwitchDSEProblem):
+        def verify_batch(self, archs):
+            return super().verify_batch(archs)[:-1]   # drops one result
+
+    prob = Broken(ArchRequest(n_ports=8, addr_bits=4), BOUND, hft(seed=0),
+                  back_annotation=False)
+    with pytest.raises(ValueError, match="index-aligned"):
+        run_dse(prob, SLA(p99_latency_ns=5000, drop_rate=1e-3),
+                ResourceBudget(dict(ALVEO_U45N)))
+
+
+class _SerialVerifyProblem(SwitchDSEProblem):
+    """The same problem forced through the serial stage-4 fallback."""
+    verify_batch = DSEProblem.verify_batch
+
+
+def test_run_dse_identical_batched_vs_serial_verify():
+    tr = hft(seed=0)
+    req = ArchRequest(n_ports=8, addr_bits=4)
+    sla = SLA(p99_latency_ns=5000, drop_rate=1e-3)
+    budget = ResourceBudget(dict(ALVEO_U45N))
+    res_b = run_dse(SwitchDSEProblem(req, BOUND, tr, back_annotation=False),
+                    sla, budget)
+    res_s = run_dse(_SerialVerifyProblem(req, BOUND, tr, back_annotation=False),
+                    sla, budget)
+    assert sorted(a.short() for a, _ in res_b.pareto) == \
+           sorted(a.short() for a, _ in res_s.pareto)
+    assert res_b.best.short() == res_s.best.short()
+    assert res_b.best_verify.p99_latency_ns == res_s.best_verify.p99_latency_ns
+    assert res_b.best_verify.drop_rate == res_s.best_verify.drop_rate
+    assert [lg.survived for lg in res_b.logs] == \
+           [lg.survived for lg in res_s.logs]

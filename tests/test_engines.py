@@ -1,0 +1,212 @@
+"""The fidelity-ladder registry, the verify_engine knob, and the escalation
+policy ("auto" verifies the front with batched netsim, the champion with the
+cycle-accurate datapath)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ArchRequest, ResourceBudget, SLA, SchedulerKind,
+                        SwitchArch, ForwardTableKind, VOQKind, bind,
+                        compressed_protocol, run_dse)
+from repro.core.dse import VerifyResult
+from repro.sim import ENGINES, get_engine, ladder, run_netsim
+from repro.sim.switch_problem import SwitchDSEProblem
+from repro.traces import hft, uniform
+
+BOUND = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
+
+
+def _arch(**kw):
+    base = dict(n_ports=4, bus_bits=256, fwd=ForwardTableKind.FULL_LOOKUP,
+                voq=VOQKind.NXN, sched=SchedulerKind.RR, voq_depth=64,
+                addr_bits=4)
+    base.update(kw)
+    return SwitchArch(**base)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_ladder_is_complete_and_ordered():
+    names = {"analytic", "surrogate", "batched_surrogate", "netsim",
+             "batched_netsim", "cycle"}
+    assert names <= set(ENGINES)
+    rungs = [e.rung for e in ladder()]
+    assert rungs == sorted(rungs)
+    assert ladder()[0].name == "analytic" and ladder()[-1].name == "cycle"
+    # the batched rungs advertise native batch forms, the serial ones do not
+    assert get_engine("batched_netsim").batched
+    assert get_engine("batched_surrogate").batched
+    assert not get_engine("netsim").batched
+    assert not get_engine("cycle").batched
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(KeyError, match="unknown engine"):
+        get_engine("hdl_simulation")
+
+
+@pytest.mark.parametrize("name", ["analytic", "surrogate", "batched_surrogate",
+                                  "netsim", "batched_netsim"])
+def test_engine_contract(name):
+    """Every rung takes (arch, bound, trace) and returns a VerifyResult with
+    finite metrics on a live trace; batch results index-align."""
+    tr = uniform(seed=0, n_ports=4, duration_s=30e-6, load=0.3, payload=256)
+    eng = get_engine(name)
+    archs = [_arch(), _arch(bus_bits=512)]
+    v = eng.evaluate(archs[0], BOUND, tr)
+    assert isinstance(v, VerifyResult)
+    assert math.isfinite(v.p99_latency_ns)
+    assert v.throughput_gbps > 0
+    assert v.meta["engine"] in (name, "surrogate", "netsim", "batched_netsim")
+    vs = eng.evaluate_batch(archs, BOUND, tr)
+    assert len(vs) == 2
+    assert all(isinstance(x, VerifyResult) for x in vs)
+
+
+def test_surrogate_rungs_report_infinite_buffers():
+    tr = uniform(seed=0, n_ports=4, duration_s=30e-6, load=0.3, payload=256)
+    for name in ("surrogate", "batched_surrogate"):
+        assert get_engine(name).evaluate(_arch(), BOUND, tr).drop_rate == 0.0
+
+
+def test_batched_rungs_match_their_serial_rung():
+    tr = uniform(seed=0, n_ports=4, duration_s=30e-6, load=0.6, payload=256)
+    a = _arch(voq_depth=4)
+    vn = get_engine("netsim").evaluate(a, BOUND, tr)
+    vb = get_engine("batched_netsim").evaluate(a, BOUND, tr)
+    assert vb.drop_rate == vn.drop_rate
+    np.testing.assert_array_equal(vb.meta["latency_ns"], vn.meta["latency_ns"])
+
+
+def test_cycle_engine_smoke():
+    tr = uniform(seed=2, n_ports=4, duration_s=30e-6, load=0.4, payload=256)
+    v = get_engine("cycle").evaluate(_arch(sched=SchedulerKind.ISLIP), BOUND, tr)
+    assert v.meta["engine"] == "cycle"
+    assert math.isfinite(v.p99_latency_ns) and v.throughput_gbps > 0
+
+
+# ------------------------------------------------------- verify_engine knob
+
+def _small_problem(verify_engine):
+    tr = uniform(seed=2, n_ports=4, duration_s=30e-6, load=0.4, payload=256)
+    return SwitchDSEProblem(ArchRequest(n_ports=4, addr_bits=4), BOUND, tr,
+                            back_annotation=False, verify_engine=verify_engine)
+
+
+def _switch_span_ns(v, trace):
+    """Netsim latency minus the host-side constants (mean NIC serialisation +
+    both propagation hops) — closer to the span the cycle-accurate datapath
+    measures.  Netsim additionally holds ports for the egress-link occupancy
+    (wire/link·η) where the cycle sim serialises flits at f_clk, so cross-
+    fidelity latency comparisons stay order-of-magnitude, not tight."""
+    wire = np.asarray(trace.payload_bytes) + BOUND.header_bytes
+    offset = wire.mean() * 8 / (trace.link_gbps * 1e9) + 2 * 50e-9
+    return v.mean_latency_ns - offset * 1e9
+
+
+def test_unknown_verify_engine_rejected():
+    with pytest.raises(ValueError, match="verify_engine"):
+        _small_problem("rtl")
+
+
+def test_auto_escalates_only_the_champion():
+    """"auto" ranks with batched netsim (identical front to "netsim") and
+    attaches a cycle-accurate verdict to the champion only, landing within a
+    model-fidelity tolerance of the netsim metrics."""
+    sla = SLA(p99_latency_ns=math.inf, drop_rate=1e-3)
+    budget = ResourceBudget({"luts": 870_000, "ffs": 1_740_000, "brams": 1_344,
+                             "bram": 1_344})
+    res_auto = run_dse(_small_problem("auto"), sla, budget, top_k=2)
+    res_net = run_dse(_small_problem("netsim"), sla, budget, top_k=2)
+    assert res_auto.best.short() == res_net.best.short()
+    assert sorted(a.short() for a, _ in res_auto.pareto) == \
+           sorted(a.short() for a, _ in res_net.pareto)
+    # only the champion carries the escalated cycle-sim verdict
+    esc = res_auto.best_verify.meta["escalated"]
+    assert esc.meta["engine"] == "cycle"
+    others = [v for a, v, _, _ in res_auto.evaluated if a is not res_auto.best]
+    assert all("escalated" not in v.meta for v in others)
+    assert "escalated" not in res_net.best_verify.meta
+    # the cycle-accurate champion metrics corroborate netsim (Fig.6-style
+    # cross-fidelity tolerance on the switch-internal span, not bit equality:
+    # netsim additionally counts host NIC serialisation + propagation)
+    span = _switch_span_ns(res_auto.best_verify, _small_problem("auto").trace)
+    assert 0.1 < esc.mean_latency_ns / span < 10.0
+    assert esc.drop_rate <= sla.drop_rate * 1.5
+    assert 0.5 < esc.throughput_gbps / res_auto.best_verify.throughput_gbps < 2.0
+
+
+def test_cycle_verify_engine_runs_rung4_for_all_survivors():
+    sla = SLA(p99_latency_ns=math.inf, drop_rate=5e-2)
+    budget = ResourceBudget({"luts": 870_000, "ffs": 1_740_000, "brams": 1_344,
+                             "bram": 1_344})
+    res = run_dse(_small_problem("cycle"), sla, budget, top_k=1)
+    assert res.best is not None
+    assert all(v.meta["engine"] == "cycle" for _, v, _, _ in res.evaluated)
+    # cross-fidelity sanity vs the netsim verdict on the same candidate
+    tr = _small_problem("cycle").trace
+    vn = run_netsim(res.best, BOUND, tr, back_annotation=False)
+    assert 0.1 < res.best_verify.mean_latency_ns / _switch_span_ns(vn, tr) < 10.0
+    assert 0.5 < res.best_verify.throughput_gbps / vn.throughput_gbps < 2.0
+
+
+# ------------------------------------------------------------ API surface
+
+def test_fidelity_verify_engine_round_trips():
+    from repro.api import Scenario, registry
+    from repro.api.scenario import Fidelity
+    import dataclasses
+    assert Fidelity().verify_engine == "netsim"
+    with pytest.raises(ValueError, match="verify_engine"):
+        Fidelity(verify_engine="spice")
+    s = registry["hft"]
+    s2 = dataclasses.replace(s, fidelity=Fidelity(back_annotation=False,
+                                                  verify_engine="auto"))
+    rt = Scenario.from_json(s2.to_json())
+    assert rt == s2 and rt.fidelity.verify_engine == "auto"
+    assert s.override(verify_engine="cycle").fidelity.verify_engine == "cycle"
+    # overriding other knobs must not clobber the engine choice
+    assert s2.override(top_k=3).fidelity.verify_engine == "auto"
+
+
+def test_cli_verify_engine_flag():
+    from repro.api.cli import build_parser
+    args = build_parser().parse_args(
+        ["run", "hft", "--verify-engine", "auto"])
+    assert args.verify_engine == "auto"
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["run", "hft", "--verify-engine", "rtl"])
+
+
+def test_run_scenario_reports_stage4_throughput():
+    from repro.api import registry, run_scenario
+    s = registry["underwater"].override(back_annotation=False, top_k=2,
+                                        trace_params={"duration_s": 4e-4})
+    rep = run_scenario(s)
+    assert rep.stage4_candidates >= 1
+    assert rep.stage4_time_s > 0
+    d = rep.to_dict()
+    assert d["stage4_candidates"] == rep.stage4_candidates
+    assert d["stage2_candidates"] == rep.stage2_candidates
+
+
+def test_campaign_batches_stage4_and_reports_throughput():
+    from repro.api import registry, run_campaign
+    base = registry["underwater"].override(back_annotation=False, top_k=2,
+                                           trace_params={"duration_s": 4e-4})
+    import dataclasses
+    twin = dataclasses.replace(base, name="underwater_twin")
+    camp = run_campaign([base, twin], name="stage4-batch")
+    # two scenarios share (trace, bound, engine): one batched verify call
+    assert camp.stage4_batches == 1
+    assert camp.stage4_candidates == sum(r.stage4_candidates
+                                         for r in camp.reports)
+    assert camp.stage4_cands_per_sec > 0
+    assert "stage4_cands_per_sec" in camp.to_dict()
+    # campaign results identical to solo runs (batch rows are independent)
+    from repro.api import run_scenario
+    solo = run_scenario(base)
+    assert [a.short() for a, _ in camp.reports[0].pareto] == \
+           [a.short() for a, _ in solo.pareto]
