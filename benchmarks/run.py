@@ -20,8 +20,8 @@ import time
 import traceback
 
 from . import (dse_throughput, fig1_sensitivity, fig6_fidelity, fig7_dse_pareto,
-               fig8_scaling, moe_fabric, roofline_table, table1_resources,
-               table2_adaptation)
+               fig8_scaling, moe_fabric, roofline_table, search_quality,
+               table1_resources, table2_adaptation)
 
 SUITES = {
     "table1": table1_resources.run,
@@ -33,6 +33,7 @@ SUITES = {
     "roofline": roofline_table.run,
     "moe_fabric": moe_fabric.run,
     "dse_throughput": dse_throughput.run,
+    "search": search_quality.run,
 }
 
 DEFAULT_JSON = "BENCH_dse.json"

@@ -1,0 +1,93 @@
+"""Search-quality acceptance: NSGA-II vs exhaustive on the enlarged hft space.
+
+The generational engine must reach >= 95% of the exhaustive front's
+hypervolume while evaluating <= 25% of the (>= 1024-point) joint space —
+the ISSUE-4 acceptance bar, emitted into ``BENCH_dse.json`` so the search
+quality/cost trade-off is diffable across commits.  Also reports wall-clock
+for both paths and a same-seed reproducibility check.
+
+    python -m benchmarks.search_quality
+"""
+
+import time
+
+from .common import emit
+
+
+def run():
+    import numpy as np
+
+    from repro.core import (ArchRequest, SLA, bind, compressed_protocol,
+                            pareto_front)
+    from repro.core.pareto import hypervolume_2d
+    from repro.core.search import SearchSpec, evaluate_space, run_search
+    from repro.sim.switch_problem import SwitchDSEProblem
+    from repro.traces import hft
+
+    bound = bind(compressed_protocol(addr_bits=4, length_bits=6), flit_bits=256)
+    tr = hft(seed=0)
+    prob = SwitchDSEProblem(ArchRequest(n_ports=8, addr_bits=4), bound, tr,
+                            back_annotation=False)
+    space = prob.space()
+    assert space.size() >= 1024, "acceptance bar needs an enlarged space"
+    sla = SLA(p99_latency_ns=5000, drop_rate=1e-3)
+
+    # ---- exhaustive reference: every phenotype through one batched call
+    t0 = time.perf_counter()
+    ex = evaluate_space(prob, sla)
+    t_ex = time.perf_counter() - t0
+    ref = tuple(float(x) for x in ex.objectives.max(axis=0) * 1.1 + 1e-9)
+    hv_ex = hypervolume_2d(ex.front_objectives(), ref)
+    emit("search_quality/exhaustive", t_ex * 1e6 / max(ex.surrogate_rows, 1),
+         f"{space.size()} genomes; {ex.surrogate_rows} unique phenotypes; "
+         f"front {len(ex.front())}; hv {hv_ex:.4g}")
+
+    # ---- NSGA-II under the 25% evaluation budget
+    budget = space.size() // 4
+    spec = SearchSpec(population=48, generations=10, seed=0,
+                      max_evaluations=budget)
+    t0 = time.perf_counter()
+    out = run_search(prob, spec, sla)
+    t_search = time.perf_counter() - t0
+    objs = np.asarray([prob.surrogate_objectives(c, sr)
+                       for c, sr in out.valid], float)
+    keep = pareto_front(list(range(len(objs))), key=lambda i: tuple(objs[i]))
+    hv_s = hypervolume_2d(objs[keep], ref)
+    hv_frac = hv_s / max(hv_ex, 1e-300)
+    eval_frac = out.surrogate_rows / space.size()
+    ok = hv_frac >= 0.95 and out.surrogate_rows <= budget
+    emit("search_quality/nsga2", t_search * 1e6 / max(out.surrogate_rows, 1),
+         f"{out.generations} gens; {out.evaluations} genome evals; "
+         f"{out.surrogate_rows} surrogate rows ({eval_frac:.1%} of space); "
+         f"hv {hv_s:.4g}")
+    emit("search_quality/hv_fraction", 0.0,
+         f"{hv_frac:.4f} ({'PASS' if ok else 'FAIL'} >=0.95 @ <=25% evals)")
+
+    # ---- same seed twice -> bit-identical front
+    out2 = run_search(prob, spec, sla)
+    reproducible = ([c.short() for c, _ in out.valid]
+                    == [c.short() for c, _ in out2.valid]
+                    and out.hv_history == out2.hv_history)
+    emit("search_quality/seed_reproducible", 0.0, str(reproducible))
+
+    return {
+        "space_size": int(space.size()),
+        "exhaustive_rows": int(ex.surrogate_rows),
+        "exhaustive_front_size": int(len(ex.front())),
+        "hv_exhaustive": float(hv_ex),
+        "hv_nsga2": float(hv_s),
+        "hv_fraction": float(hv_frac),
+        "budget": int(budget),
+        "nsga2_generations": int(out.generations),
+        "nsga2_genome_evaluations": int(out.evaluations),
+        "nsga2_surrogate_rows": int(out.surrogate_rows),
+        "evaluation_fraction": float(eval_frac),
+        "exhaustive_wall_s": float(t_ex),
+        "nsga2_wall_s": float(t_search),
+        "seed_reproducible": bool(reproducible),
+        "pass": bool(ok),
+    }
+
+
+if __name__ == "__main__":
+    run()

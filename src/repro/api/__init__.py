@@ -11,11 +11,11 @@ from .registry import ScenarioRegistry, registry
 from .runner import (CampaignReport, ScenarioReport, build_bound,
                      build_problem, run_campaign, run_scenario)
 from .scenario import (CommModelSpec, Fidelity, PROTOCOL_BUILDERS,
-                       ProtocolSpec, Scenario, TraceSpec)
+                       ProtocolSpec, Scenario, SearchSpec, TraceSpec)
 
 __all__ = [
     "CampaignReport", "CommModelSpec", "Fidelity", "PROTOCOL_BUILDERS",
     "ProtocolSpec", "Scenario", "ScenarioRegistry", "ScenarioReport",
-    "TraceSpec", "build_bound", "build_problem", "registry", "run_campaign",
-    "run_scenario",
+    "SearchSpec", "TraceSpec", "build_bound", "build_problem", "registry",
+    "run_campaign", "run_scenario",
 ]

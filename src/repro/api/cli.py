@@ -4,6 +4,9 @@
     spac show hft                              # dump a scenario as JSON
     spac run hft --sla-p99-ns 5000             # one scenario, with overrides
     spac run my_scenario.json --out report.json
+    spac run hft --search nsga2 --generations 10 --search-seed 0
+    spac run hft --search nsga2 --checkpoint-dir ckpt && \
+        spac run hft --search nsga2 --checkpoint-dir ckpt --resume
     spac sweep hft underwater industry         # campaign over registry names
     spac sweep --config campaign.json          # campaign from a config file
 
@@ -96,6 +99,33 @@ def _load_scenario(target: str):
         f"known: {', '.join(registry.names())}")
 
 
+def _search_override(scenario, args):
+    """CLI search flags -> SearchSpec (or the ``override`` keep-sentinel)."""
+    import dataclasses
+    from .scenario import _KEEP
+    from repro.core.search import SearchSpec
+    updates = {k: v for k, v in {
+        "population": getattr(args, "population", None),
+        "generations": getattr(args, "generations", None),
+        "seed": getattr(args, "search_seed", None),
+        "mutation_rate": getattr(args, "mutation_rate", None),
+        "crossover_rate": getattr(args, "crossover_rate", None),
+        "max_evaluations": getattr(args, "max_evals", None),
+        "checkpoint_dir": getattr(args, "checkpoint_dir", None),
+    }.items() if v is not None}
+    algo = getattr(args, "search", None)
+    if algo is None and not updates:
+        return _KEEP
+    if algo is None and scenario.search is None:
+        raise SystemExit(
+            "--generations/--population/... need --search ALGO (or a "
+            "scenario that already carries a search spec)")
+    base = scenario.search or SearchSpec()
+    if algo is not None:
+        updates["algorithm"] = algo
+    return dataclasses.replace(base, **updates)
+
+
 def _apply_overrides(scenario, args):
     trace_params = _parse_kv(getattr(args, "trace", None))
     if getattr(args, "seed", None) is not None:
@@ -106,6 +136,7 @@ def _apply_overrides(scenario, args):
         raise SystemExit("trace overrides only apply to switch-domain scenarios")
     budget_limits = _parse_kv(getattr(args, "budget", None))
     return scenario.override(
+        search=_search_override(scenario, args),
         sla_p99_latency_ns=args.sla_p99_ns,
         sla_drop_rate=args.sla_drop_rate,
         sla_min_throughput_gbps=args.sla_min_gbps,
@@ -147,6 +178,31 @@ def _add_override_flags(p: argparse.ArgumentParser) -> None:
                    help="stage-4 fidelity rung: batched netsim (default), "
                         "cycle-accurate datapath for every survivor, or "
                         "auto (netsim front + cycle-sim champion)")
+    from repro.core.search import SEARCH_ALGORITHMS
+    gs = p.add_argument_group(
+        "search engine (generational NSGA-II instead of exhaustive "
+        "stage-1/2 enumeration)")
+    gs.add_argument("--search", choices=SEARCH_ALGORITHMS, default=None,
+                    help="enable the generational engine over the "
+                         "problem's parameterized design space")
+    gs.add_argument("--generations", type=int, default=None,
+                    help="generation budget")
+    gs.add_argument("--population", type=int, default=None,
+                    help="population size per generation")
+    gs.add_argument("--search-seed", type=int, default=None,
+                    help="engine RNG seed (bit-reproducible)")
+    gs.add_argument("--mutation-rate", type=float, default=None)
+    gs.add_argument("--crossover-rate", type=float, default=None)
+    gs.add_argument("--max-evals", type=int, default=None,
+                    help="hard cap on evaluated genomes (an upper bound on "
+                         "surrogate rows: pruned/duplicate genomes are "
+                         "answered from cache)")
+    gs.add_argument("--checkpoint-dir", default=None,
+                    help="save search state here every generation "
+                         "(campaigns nest per-scenario subdirectories)")
+    gs.add_argument("--resume", action="store_true",
+                    help="resume a checkpointed search from its "
+                         "checkpoint directory")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -216,7 +272,7 @@ def _cmd_run(args) -> int:
     if args.save_config:
         scenario.save(args.save_config)
         print(f"wrote scenario spec to {args.save_config}")
-    report = run_scenario(scenario, verbose=args.verbose)
+    report = run_scenario(scenario, verbose=args.verbose, resume=args.resume)
     print(report.summary())
     if args.out:
         with open(args.out, "w") as f:
@@ -237,7 +293,8 @@ def _cmd_sweep(args) -> int:
     else:
         raise SystemExit("sweep needs scenario names or --config FILE")
     scenarios = [_apply_overrides(s, args) for s in scenarios]
-    report = run_campaign(scenarios, name=name, verbose=args.verbose)
+    report = run_campaign(scenarios, name=name, verbose=args.verbose,
+                          resume=args.resume)
     print(report.summary())
     if args.out:
         with open(args.out, "w") as f:

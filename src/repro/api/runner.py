@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -29,6 +30,7 @@ from repro.core.dse import (DSEProblem, DSEResult, ResourceBudget, SLA,
                             StageLog, SurrogateResult, VerifyResult,
                             finalize_result, stage1_static, stage2_screen,
                             stage3_size, stage4_verify)
+from repro.core.search import SearchDriver, run_search
 
 from .registry import registry
 from .scenario import Scenario
@@ -177,7 +179,7 @@ class ScenarioReport:
             ],
             "stages": [
                 {"stage": lg.stage, "considered": lg.considered,
-                 "survived": lg.survived}
+                 "survived": lg.survived, "notes": list(lg.notes)}
                 for lg in self.result.logs
             ],
             "n_verified": len(self.result.evaluated),
@@ -259,28 +261,57 @@ class CampaignReport:
 # execution
 # --------------------------------------------------------------------------
 
-def run_scenario(scenario: Union[Scenario, str], *, verbose: bool = False) -> ScenarioReport:
+def _search_checkpoint_dir(scenario: Scenario, *, campaign: bool = False) -> Optional[str]:
+    """Campaigns nest each scenario's search state under its own name so one
+    ``checkpoint_dir`` serves the whole sweep."""
+    spec = scenario.search
+    if spec is None or not spec.checkpoint_dir:
+        return None
+    return (os.path.join(spec.checkpoint_dir, scenario.name)
+            if campaign else spec.checkpoint_dir)
+
+
+def run_scenario(scenario: Union[Scenario, str], *, verbose: bool = False,
+                 resume: bool = False) -> ScenarioReport:
     """One spec in, verified Pareto front out (the quickstart in one call).
 
     Runs the same staged composition as ``run_dse`` (inlined only to time
     the batched surrogate call); ``tests/test_api.py`` asserts the stage
     logs and Pareto front stay identical to the legacy ``optimize_switch``
     → ``run_dse`` path, so the two cannot silently diverge.
+
+    With ``scenario.search`` set, stages 1-2 are replaced by the seeded
+    generational NSGA-II engine (``repro.core.search``); the final archive
+    feeds the identical stage-3/4 ladder.  ``resume`` continues a
+    checkpointed search from ``search.checkpoint_dir``.
     """
     if isinstance(scenario, str):
         scenario = registry[scenario]
     t0 = time.perf_counter()
     problem, sla, budget = build_problem(scenario)
     fid = scenario.fidelity
-    active, log1 = stage1_static(problem, delta=fid.delta)
-    if verbose:
-        print(log1)
-    t2 = time.perf_counter()
-    srs = problem.surrogate_batch(active)
-    stage2_time = time.perf_counter() - t2
-    valid, log2 = stage2_screen(problem, active, sla, surrogates=srs)
-    if verbose:
-        print(log2)
+    if scenario.search is not None:
+        t2 = time.perf_counter()
+        outcome = run_search(problem, scenario.search, sla, delta=fid.delta,
+                             checkpoint_dir=_search_checkpoint_dir(scenario),
+                             resume=resume)
+        stage2_time = time.perf_counter() - t2
+        valid, pre_logs = outcome.valid, [outcome.log]
+        stage2_cands = outcome.surrogate_rows
+        if verbose:
+            print(outcome.log)
+    else:
+        active, log1 = stage1_static(problem, delta=fid.delta)
+        if verbose:
+            print(log1)
+        t2 = time.perf_counter()
+        srs = problem.surrogate_batch(active)
+        stage2_time = time.perf_counter() - t2
+        valid, log2 = stage2_screen(problem, active, sla, surrogates=srs)
+        if verbose:
+            print(log2)
+        pre_logs = [log1, log2]
+        stage2_cands = len(active)
     sized, n_explored = stage3_size(problem, valid, sla, budget, top_k=fid.top_k)
     t4 = time.perf_counter()
     verifies = problem.verify_batch([a for a, _ in sized])
@@ -290,10 +321,10 @@ def run_scenario(scenario: Union[Scenario, str], *, verbose: bool = False) -> Sc
     log3 = StageLog("stage3-sizing+verify", n_explored, len(sized))
     if verbose:
         print(log3)
-    result = finalize_result(problem, evaluated, best, best_v, [log1, log2, log3])
+    result = finalize_result(problem, evaluated, best, best_v, pre_logs + [log3])
     return ScenarioReport(scenario=scenario, result=result, problem=problem,
                           wall_time_s=time.perf_counter() - t0,
-                          stage2_candidates=len(active),
+                          stage2_candidates=stage2_cands,
                           stage2_time_s=stage2_time,
                           stage4_candidates=len(sized),
                           stage4_time_s=stage4_time)
@@ -306,11 +337,13 @@ class _Ctx:
     budget: ResourceBudget
     shared_trace: bool
     group_key: Optional[str]                 # None -> own surrogate_batch call
+    driver: Optional[SearchDriver] = None    # set iff scenario.search
     active: List[Any] = dataclasses.field(default_factory=list)
     log1: Optional[StageLog] = None
     surrogates: List[SurrogateResult] = dataclasses.field(default_factory=list)
     stage1_time_s: float = 0.0
     stage2_time_s: float = 0.0               # this scenario's share of its batch
+    stage2_candidates: int = 0               # rows this scenario fanned out
     # --- stages 2-screen + 3 (sizing), filled before the stage-4 fan-out
     log2: Optional[StageLog] = None
     sized: List[Any] = dataclasses.field(default_factory=list)
@@ -346,12 +379,21 @@ def run_campaign(
     *,
     name: str = "campaign",
     verbose: bool = False,
+    resume: bool = False,
 ) -> CampaignReport:
     """Run many scenarios with shared trace analysis and batched stage 2.
 
     Per-scenario results are identical to ``run_scenario`` (candidates of the
     batched engine are row-independent), so a campaign is never a fidelity
     trade-off — only a throughput one.
+
+    Scenarios carrying a ``search`` spec run their generational engines in
+    *lockstep*: each round, every active engine's pending population joins
+    its group's single batched surrogate call (groups share a trace + bound
+    protocol exactly as in exhaustive stage 2), so N searching scenarios
+    still cost one jitted call per group per generation.  ``resume``
+    continues each scenario's checkpointed search from
+    ``search.checkpoint_dir/<scenario name>``.
     """
     scns = [registry[s] if isinstance(s, str) else s for s in scenarios]
     if not scns:
@@ -376,8 +418,19 @@ def run_campaign(
             problem, _, budget = build_problem(s)
             ctxs.append(_Ctx(s, problem, budget, False, None))
 
-    # ---- stage 1 per scenario
+    # ---- search engines: one driver per searching scenario
     for ctx in ctxs:
+        s = ctx.scenario
+        if s.search is not None:
+            ctx.driver = SearchDriver(
+                ctx.problem, s.search, s.sla, delta=s.fidelity.delta,
+                checkpoint_dir=_search_checkpoint_dir(s, campaign=True),
+                resume=resume)
+
+    # ---- stage 1 per scenario (search drivers do their own static pruning)
+    for ctx in ctxs:
+        if ctx.driver is not None:
+            continue
         t0 = time.perf_counter()
         ctx.active, ctx.log1 = stage1_static(ctx.problem,
                                              delta=ctx.scenario.fidelity.delta)
@@ -390,6 +443,8 @@ def run_campaign(
     groups: Dict[str, List[_Ctx]] = {}
     order: List[str] = []
     for i, ctx in enumerate(ctxs):
+        if ctx.driver is not None:
+            continue
         key = ctx.group_key if ctx.group_key is not None else f"solo-{i}"
         if key not in groups:
             groups[key] = []
@@ -416,14 +471,58 @@ def run_campaign(
             ctx.surrogates = srs[off:off + len(ctx.active)]
             # apportion the batched call's cost by candidate share
             ctx.stage2_time_s = elapsed * len(ctx.active) / max(len(archs), 1)
+            ctx.stage2_candidates = len(ctx.active)
             off += len(ctx.active)
 
-    # ---- stage-2 screening + stage-3 sizing per scenario
+    # ---- generational lockstep for searching scenarios: each round, every
+    # active engine's pending population rides its group's one batched call
+    sgroups: Dict[str, List[_Ctx]] = {}
+    sorder: List[str] = []
+    for i, ctx in enumerate(ctxs):
+        if ctx.driver is None:
+            continue
+        key = (ctx.group_key if ctx.group_key is not None
+               else f"solo-{i}") + "|search"
+        if key not in sgroups:
+            sgroups[key] = []
+            sorder.append(key)
+        sgroups[key].append(ctx)
+    while any(not ctx.driver.done for key in sorder for ctx in sgroups[key]):
+        for key in sorder:
+            members = [ctx for ctx in sgroups[key] if not ctx.driver.done]
+            if not members:
+                continue
+            asks = [ctx.driver.ask_candidates() for ctx in members]
+            cands = [c for a in asks for c in a]
+            elapsed = 0.0
+            srs = []
+            if cands:
+                t0 = time.perf_counter()
+                srs = members[0].problem.surrogate_batch(cands)
+                elapsed = time.perf_counter() - t0
+                stage2_time += elapsed
+                n_batches += 1
+                total_cands += len(cands)
+            off = 0
+            for ctx, a in zip(members, asks):
+                ctx.driver.tell_candidates(srs[off:off + len(a)])
+                ctx.stage2_time_s += elapsed * len(a) / max(len(cands), 1)
+                ctx.stage2_candidates += len(a)
+                off += len(a)
+
+    # ---- stage-2 screening (or search finalize) + stage-3 sizing
     for ctx in ctxs:
         s = ctx.scenario
         t0 = time.perf_counter()
-        valid, ctx.log2 = stage2_screen(ctx.problem, ctx.active, s.sla,
-                                        surrogates=ctx.surrogates)
+        if ctx.driver is not None:
+            outcome = ctx.driver.finalize()
+            valid, ctx.log2 = outcome.valid, outcome.log
+            # match solo run_scenario accounting: finalize()'s archive
+            # re-surrogation (resume path) counts as stage-2 fan-out
+            ctx.stage2_candidates = outcome.surrogate_rows
+        else:
+            valid, ctx.log2 = stage2_screen(ctx.problem, ctx.active, s.sla,
+                                            surrogates=ctx.surrogates)
         ctx.sized, ctx.n_explored = stage3_size(
             ctx.problem, valid, s.sla, ctx.budget, top_k=s.fidelity.top_k)
         ctx.stage3_time_s = time.perf_counter() - t0
@@ -472,8 +571,9 @@ def run_campaign(
         evaluated, best, best_v = stage4_verify(ctx.problem, ctx.sized, s.sla,
                                                 verifies=ctx.verifies)
         log3 = StageLog("stage3-sizing+verify", ctx.n_explored, len(ctx.sized))
-        result = finalize_result(ctx.problem, evaluated, best, best_v,
-                                 [ctx.log1, ctx.log2, log3])
+        result = finalize_result(
+            ctx.problem, evaluated, best, best_v,
+            [lg for lg in (ctx.log1, ctx.log2, log3) if lg is not None])
         if verbose:
             print(f"[{s.name}] {log3}")
         reports.append(ScenarioReport(
@@ -481,7 +581,7 @@ def run_campaign(
             wall_time_s=(ctx.stage1_time_s + ctx.stage2_time_s
                          + ctx.stage3_time_s + ctx.stage4_time_s
                          + time.perf_counter() - t0),
-            stage2_candidates=len(ctx.active),
+            stage2_candidates=ctx.stage2_candidates,
             stage2_time_s=ctx.stage2_time_s,
             stage4_candidates=len(ctx.sized),
             stage4_time_s=ctx.stage4_time_s))

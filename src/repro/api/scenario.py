@@ -32,6 +32,7 @@ from repro.core.binding import KNOWN_SEMANTICS, SemanticBinding
 from repro.core.dse import ResourceBudget, SLA, VERIFY_ENGINES
 from repro.core.dsl import (Field, Protocol, compressed_protocol,
                             ethernet_ipv4_udp)
+from repro.core.search import SearchSpec
 
 __all__ = [
     "ProtocolSpec",
@@ -39,6 +40,7 @@ __all__ = [
     "CommModelSpec",
     "Fidelity",
     "Scenario",
+    "SearchSpec",
     "PROTOCOL_BUILDERS",
 ]
 
@@ -295,6 +297,10 @@ class Fidelity:
 # the Scenario
 # --------------------------------------------------------------------------
 
+#: override() sentinel — None is a meaningful value for ``search``
+_KEEP = object()
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One experiment, declaratively: protocol → binding → trace → DSE → SLA.
@@ -316,6 +322,9 @@ class Scenario:
     sla: SLA = SLA()
     budget: Optional[ResourceBudget] = None
     fidelity: Fidelity = Fidelity()
+    #: None -> exhaustive enumeration (stages 1-2); a SearchSpec -> the
+    #: seeded generational NSGA-II engine over the problem's space()
+    search: Optional[SearchSpec] = None
     notes: str = ""
 
     def __post_init__(self):
@@ -354,6 +363,8 @@ class Scenario:
         if self.budget is not None:
             d["budget"] = {"limits": {k: _num_to_json(v)
                                       for k, v in self.budget.limits.items()}}
+        if self.search is not None:
+            d["search"] = self.search.to_dict()
         if self.notes:
             d["notes"] = self.notes
         return d
@@ -363,6 +374,7 @@ class Scenario:
         arch = d.get("arch")
         comm = d.get("comm")
         budget = d.get("budget")
+        search = d.get("search")
         return Scenario(
             name=d["name"],
             domain=d.get("domain", "switch"),
@@ -377,6 +389,7 @@ class Scenario:
                                     for k, v in budget["limits"].items()})
                     if budget is not None else None),
             fidelity=Fidelity.from_dict(d.get("fidelity", {})),
+            search=SearchSpec.from_dict(search) if search is not None else None,
             notes=d.get("notes", ""),
         )
 
@@ -400,6 +413,7 @@ class Scenario:
     def override(
         self,
         *,
+        search: Any = _KEEP,
         sla_p99_latency_ns: Optional[float] = None,
         sla_drop_rate: Optional[float] = None,
         sla_min_throughput_gbps: Optional[float] = None,
@@ -444,6 +458,7 @@ class Scenario:
         )
         return dataclasses.replace(
             self, sla=sla, trace=trace, budget=budget, fidelity=fid,
+            search=self.search if search is _KEEP else search,
             flit_bits=self.flit_bits if flit_bits is None else flit_bits,
             name=self.name if name is None else name,
         )

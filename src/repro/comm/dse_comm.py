@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.dse import (DSEProblem, ResourceBudget, SLA, SurrogateResult,
                             VerifyResult, run_dse)
+from repro.core.search import DesignSpace, Dim
 from repro.launch.roofline import TPU_V5E
 from repro.models.config import ModelConfig, ShardingPlan
 from repro.models.moe import MoEOptions, apply_moe
@@ -139,6 +140,25 @@ class CommDSEProblem(DSEProblem):
                     out.append(CommSpec(capacity_factor=2.0, payload=payload,
                                         a2a_chunks=chunks, microbatches=mb))
         return out
+
+    # ------------------------------------------------------ search support
+    def space(self) -> DesignSpace:
+        """Parameterized fabric space for the generational search engine —
+        per-dimension ranges (wider than the ``candidates()`` grid: 8-way
+        a2a chunking and 4 microbatches join the sweep).  The capacity
+        factor stays out of the genome: stage 3 *sizes* it from the routing
+        trace exactly like VOQ depths."""
+        return DesignSpace((
+            Dim("payload", ("bf16", "int8")),
+            Dim("a2a_chunks", (1, 2, 4, 8)),
+            Dim("microbatches", (1, 2, 4)),
+        ))
+
+    def decode(self, assignment) -> CommSpec:
+        return CommSpec(capacity_factor=2.0,
+                        payload=assignment["payload"],
+                        a2a_chunks=assignment["a2a_chunks"],
+                        microbatches=assignment["microbatches"])
 
     def static_timing(self, c: CommSpec) -> Tuple[float, float]:
         """Stage-1 prune: dispatch buffers must clear the HBM headroom within

@@ -45,15 +45,26 @@ from .dsl import (
 )
 from .features import TraceFeatures, analyze
 from .pareto import hypervolume_2d, is_dominated, pareto_front
+from .search import (
+    DesignSpace,
+    Dim,
+    NSGA2Search,
+    SearchDriver,
+    SearchOutcome,
+    SearchSpec,
+    evaluate_space,
+    run_search,
+)
 
 __all__ = [
     "AUTO", "ArchRequest", "BUS_WIDTHS", "BoundProtocol", "CustomKernelSpec",
-    "DSEProblem", "DSEResult", "ETHERNET_HEADER_BYTES", "Field",
-    "ForwardTableKind", "ParserPlan", "Protocol", "ResourceBudget", "SLA",
-    "SchedulerKind", "SemanticBinding", "StageLog", "SurrogateResult",
+    "DSEProblem", "DSEResult", "DesignSpace", "Dim", "ETHERNET_HEADER_BYTES",
+    "Field", "ForwardTableKind", "NSGA2Search", "ParserPlan", "Protocol",
+    "ResourceBudget", "SLA", "SchedulerKind", "SearchDriver", "SearchOutcome",
+    "SearchSpec", "SemanticBinding", "StageLog", "SurrogateResult",
     "SwitchArch", "TraceFeatures", "VOQKind", "VerifyResult", "analyze", "bind",
     "compressed_protocol", "depth_for_drop_rate", "enumerate_candidates",
-    "ethernet_ipv4_udp", "finalize_result", "hypervolume_2d", "is_dominated",
-    "pareto_front", "run_dse", "stage1_static", "stage2_screen", "stage3_size",
-    "stage3_verify", "stage4_verify",
+    "ethernet_ipv4_udp", "evaluate_space", "finalize_result", "hypervolume_2d",
+    "is_dominated", "pareto_front", "run_dse", "run_search", "stage1_static",
+    "stage2_screen", "stage3_size", "stage3_verify", "stage4_verify",
 ]

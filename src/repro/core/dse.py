@@ -20,11 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .pareto import pareto_front
+
+if TYPE_CHECKING:                      # import cycle: search imports this module
+    from .search import DesignSpace, SearchSpec
 
 __all__ = [
     "SLA",
@@ -42,6 +45,7 @@ __all__ = [
     "stage3_verify",
     "stage4_verify",
     "finalize_result",
+    "check_index_aligned",
     "depth_for_drop_rate",
 ]
 
@@ -152,6 +156,31 @@ class DSEProblem:
         analytic fabric metrics."""
         return [self.verify(c) for c in cands]
 
+    def space(self) -> Optional["DesignSpace"]:
+        """Parameterized design space for the generational search engine.
+
+        Where ``candidates()`` returns a *pre-built list* of templates, this
+        returns per-dimension ranges (``repro.core.search.DesignSpace``) that
+        NSGA-II samples — so the joint space can be combinatorially larger
+        than anything worth enumerating.  Problems that support search
+        override this together with ``decode``; the default (None) keeps the
+        problem exhaustive-only."""
+        return None
+
+    def decode(self, assignment: Dict[str, Any]) -> Any:
+        """Materialise one ``space()`` point (a name->choice dict) into a
+        candidate — the inverse of a genome, used by the search engine."""
+        raise NotImplementedError
+
+    def surrogate_objectives(self, cand, sr: SurrogateResult) -> Tuple[float, float]:
+        """Stage-2-fidelity (latency, primary-resource) pair for the search
+        engine (minimise both).  Mirrors ``objectives`` one rung down the
+        ladder: the generational engine ranks whole populations on surrogate
+        results long before anything is sized or verified."""
+        res = self.resources(cand)
+        primary = res.get("bram", res.get("bytes_per_device", sum(res.values())))
+        return (sr.p(99), float(primary))
+
     def escalate(self, cand, v: VerifyResult) -> Optional[VerifyResult]:
         """Optional champion escalation to a higher fidelity rung.
 
@@ -206,6 +235,18 @@ class DSEResult:
         return "\n".join(lines)
 
 
+def check_index_aligned(problem: DSEProblem, results: Sequence[Any],
+                        cands: Sequence[Any], hook: str) -> None:
+    """One home for the batch-hook alignment error, shared by the staged
+    engine and the search driver so the message can never drift."""
+    if len(results) != len(cands):
+        raise ValueError(
+            f"{type(problem).__name__}.{hook} returned {len(results)} "
+            f"results for a {len(cands)}-candidate batch (result shape "
+            f"[{len(results)}] vs candidate shape [{len(cands)}]); results "
+            "must be index-aligned")
+
+
 def depth_for_drop_rate(q_occupancy: np.ndarray, eps: float) -> int:
     """Smallest depth d with P(occupancy > d) <= ε (stage 3 core)."""
     q = np.asarray(q_occupancy, dtype=np.float64)
@@ -241,11 +282,9 @@ def stage2_screen(
     scenario its slice back.  When absent, the problem's ``surrogate_batch``
     hook runs (vectorised where the problem provides it, serial otherwise).
     """
-    srs = list(surrogates) if surrogates is not None else problem.surrogate_batch(list(active))
-    if len(srs) != len(active):
-        raise ValueError(
-            f"surrogate_batch returned {len(srs)} results for {len(active)} "
-            "candidates; results must be index-aligned")
+    active = list(active)
+    srs = list(surrogates) if surrogates is not None else problem.surrogate_batch(active)
+    check_index_aligned(problem, srs, active, "surrogate_batch")
     valid: List[Tuple[Any, SurrogateResult]] = []
     for a, sr in zip(active, srs):
         if sr.p(99) <= sla.p99_latency_ns and sr.throughput_gbps >= sla.min_throughput_gbps:
@@ -309,10 +348,7 @@ def stage4_verify(
     ``problem.escalate`` (a no-op by default)."""
     cands = [a for a, _ in sized]
     vs = list(verifies) if verifies is not None else problem.verify_batch(cands)
-    if len(vs) != len(cands):
-        raise ValueError(
-            f"verify_batch returned {len(vs)} results for {len(cands)} "
-            "candidates; results must be index-aligned")
+    check_index_aligned(problem, vs, cands, "verify_batch")
     evaluated: List[Tuple[Any, VerifyResult, Dict[str, float], bool]] = []
     best: Optional[Any] = None
     best_v: Optional[VerifyResult] = None
@@ -369,20 +405,40 @@ def run_dse(
     delta: float = 0.2,
     top_k: int = 8,
     verbose: bool = False,
+    search: Optional["SearchSpec"] = None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
 ) -> DSEResult:
     """Algorithm 1: Progressive Constraint Satisfaction.
 
     Composed from the staged functions above so callers that need to
     interleave stages across problems (``repro.api.run_campaign`` batches
     stage 2 across scenarios) reuse the exact same semantics.
+
+    ``search`` replaces the exhaustive stage-1/2 enumeration with the
+    generational NSGA-II engine over ``problem.space()`` (seeded, resumable
+    — see ``repro.core.search``): the engine's final archive plays the role
+    of the screened ``valid`` set, and stages 3-4 run unchanged, so
+    verification semantics are identical either way.  ``checkpoint_dir`` /
+    ``resume`` control search-state persistence (``checkpoint_dir`` defaults
+    to ``search.checkpoint_dir``).
     """
-    active, log1 = stage1_static(problem, delta=delta)
-    if verbose:
-        print(log1)
-    valid, log2 = stage2_screen(problem, active, sla)
-    if verbose:
-        print(log2)
+    if search is not None:
+        from .search import run_search
+        outcome = run_search(problem, search, sla, delta=delta,
+                             checkpoint_dir=checkpoint_dir, resume=resume)
+        valid, logs = outcome.valid, [outcome.log]
+        if verbose:
+            print(outcome.log)
+    else:
+        active, log1 = stage1_static(problem, delta=delta)
+        if verbose:
+            print(log1)
+        valid, log2 = stage2_screen(problem, active, sla)
+        if verbose:
+            print(log2)
+        logs = [log1, log2]
     evaluated, best, best_v, log3 = stage3_verify(problem, valid, sla, budget, top_k=top_k)
     if verbose:
         print(log3)
-    return finalize_result(problem, evaluated, best, best_v, [log1, log2, log3])
+    return finalize_result(problem, evaluated, best, best_v, logs + [log3])

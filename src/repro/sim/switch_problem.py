@@ -12,7 +12,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.archspec import ArchRequest, SwitchArch, enumerate_candidates
+from repro.core.archspec import (AUTO, ArchRequest, BUS_WIDTHS,
+                                 ForwardTableKind, SchedulerKind, SwitchArch,
+                                 VOQKind, enumerate_candidates)
 from repro.core.binding import BoundProtocol
 from repro.core.dse import (
     DSEProblem,
@@ -25,6 +27,7 @@ from repro.core.dse import (
     run_dse,
 )
 from repro.core.features import TraceFeatures, analyze
+from repro.core.search import DesignSpace, Dim
 from .backannotate import annotate
 from .batched_netsim import run_netsim_batched
 from .batched_surrogate import run_surrogate_batched
@@ -32,7 +35,17 @@ from .netsim import NetSimConfig, run_netsim
 from .resources import ALVEO_U45N, BRAM_BITS, synthesize
 from .surrogate import run_surrogate
 
-__all__ = ["SwitchDSEProblem", "VERIFY_ENGINES", "optimize_switch"]
+__all__ = ["SwitchDSEProblem", "VERIFY_ENGINES", "optimize_switch",
+           "ISLIP_ITER_RANGE", "HASH_BANK_RANGE", "HASH_DEPTH_RANGE"]
+
+#: extended per-dimension ranges the parameterized ``space()`` sweeps beyond
+#: the classic ``enumerate_candidates`` grid (which pins these to the
+#: ``SwitchArch`` defaults) — the joint space for the paper's all-AUTO 8-port
+#: request is 4*2*2*3*4*3*3 = 1728 points, squarely generational-search
+#: territory
+ISLIP_ITER_RANGE: Tuple[int, ...] = (1, 2, 3, 4)
+HASH_BANK_RANGE: Tuple[int, ...] = (2, 4, 8)
+HASH_DEPTH_RANGE: Tuple[int, ...] = (128, 256, 512)
 
 
 def align_depth_to_bram(d_opt: int, bus_bits: int) -> int:
@@ -68,6 +81,63 @@ class SwitchDSEProblem(DSEProblem):
     # ------------------------------------------------------------- stage 1
     def candidates(self) -> List[SwitchArch]:
         return enumerate_candidates(self.request)
+
+    # ------------------------------------------------------ search support
+    def space(
+        self,
+        *,
+        islip_iters: Tuple[int, ...] = ISLIP_ITER_RANGE,
+        hash_banks: Tuple[int, ...] = HASH_BANK_RANGE,
+        hash_depths: Tuple[int, ...] = HASH_DEPTH_RANGE,
+    ) -> DesignSpace:
+        """Parameterized design space for the generational search engine.
+
+        Per-dimension ranges instead of the pre-built ``candidates()`` list:
+        explicit (non-AUTO) request policies collapse to single-choice
+        dimensions, and the micro-architecture knobs ``enumerate_candidates``
+        pins (iSLIP iterations, hash banking/depth) become searchable.
+        """
+        req = self.request
+        fwd_opts = [
+            f for f in (list(ForwardTableKind) if req.fwd is AUTO else [req.fwd])
+            if not (f is ForwardTableKind.FULL_LOOKUP and req.addr_bits > 16)
+        ] or [ForwardTableKind.MULTIBANK_HASH]
+        voq_opts = list(VOQKind) if self.request.voq is AUTO else [req.voq]
+        sched_opts = list(SchedulerKind) if req.sched is AUTO else [req.sched]
+        bus_opts = BUS_WIDTHS if req.bus_bits is AUTO else (req.bus_bits,)
+        return DesignSpace((
+            Dim("bus_bits", tuple(bus_opts)),
+            Dim("fwd", tuple(fwd_opts)),
+            Dim("voq", tuple(voq_opts)),
+            Dim("sched", tuple(sched_opts)),
+            Dim("islip_iters", tuple(islip_iters)),
+            Dim("hash_banks", tuple(hash_banks)),
+            Dim("hash_depth", tuple(hash_depths)),
+        ))
+
+    def decode(self, assignment) -> SwitchArch:
+        """One space point -> concrete template.  Genes that are inert for
+        the selected policies (iSLIP iterations under RR/EDRRM, hash banking
+        under FullLookup) canonicalise to the ``SwitchArch`` defaults so
+        distinct genomes encoding the same micro-architecture decode to one
+        phenotype — the search driver dedupes on it."""
+        req = self.request
+        fwd, sched = assignment["fwd"], assignment["sched"]
+        is_islip = sched is SchedulerKind.ISLIP
+        is_hash = fwd is ForwardTableKind.MULTIBANK_HASH
+        return SwitchArch(
+            n_ports=req.n_ports,
+            bus_bits=assignment["bus_bits"],
+            fwd=fwd,
+            voq=assignment["voq"],
+            sched=sched,
+            voq_depth=64 if req.voq_depth is AUTO else req.voq_depth,
+            hash_banks=assignment["hash_banks"] if is_hash else 4,
+            hash_depth=assignment["hash_depth"] if is_hash else 256,
+            islip_iters=assignment["islip_iters"] if is_islip else 2,
+            addr_bits=req.addr_bits,
+            custom_kernels=req.custom_kernels,
+        )
 
     def static_timing(self, a: SwitchArch) -> Tuple[float, float]:
         rep = synthesize(a, self.bound)

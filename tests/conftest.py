@@ -14,6 +14,13 @@ from repro.launch.mesh import compat_make_mesh  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate tests/golden/*.json from the current pipeline "
+             "instead of diffing against it (see tests/test_golden.py)")
+
+
 @pytest.fixture(scope="session")
 def mesh11():
     return compat_make_mesh((1, 1), ("data", "model"))

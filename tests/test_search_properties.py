@@ -1,0 +1,130 @@
+"""Property-based invariants for the Pareto utilities and the NSGA-II engine
+(hypothesis when available; skips cleanly otherwise — example-based twins of
+the same assertions live in ``tests/test_search.py`` so the logic is always
+exercised).
+
+  * ``pareto_front``: no returned member is dominated by any input point;
+    the result is invariant under input permutation; union-stability
+    (front(front(A) ∪ front(B)) == front(A ∪ B) as sets).
+  * ``hypervolume_2d``: non-negative; monotone non-decreasing under point
+    insertion; dominated points contribute nothing (hv(S) == hv(front(S))).
+  * NSGA-II: archive hypervolume is non-decreasing generation over
+    generation, and the same seed yields a bit-identical front.
+"""
+
+import numpy as np
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.pareto import hypervolume_2d, is_dominated, pareto_front
+from repro.core.search import DesignSpace, Dim, NSGA2Search, SearchSpec
+
+_coord = st.floats(min_value=0.0, max_value=100.0,
+                   allow_nan=False, allow_infinity=False)
+_points = st.lists(st.tuples(_coord, _coord), min_size=1, max_size=24)
+
+
+def _front_set(pts):
+    return set(pareto_front(list(pts), key=lambda p: p))
+
+
+# --------------------------------------------------------------------------
+# pareto_front
+# --------------------------------------------------------------------------
+
+@settings(deadline=None)
+@given(_points)
+def test_pareto_front_members_not_dominated(pts):
+    front = pareto_front(pts, key=lambda p: p)
+    assert front, "front of a non-empty set is non-empty"
+    for f in front:
+        assert not any(is_dominated(f, q) for q in pts)
+
+
+@settings(deadline=None)
+@given(_points, st.integers(min_value=0, max_value=2 ** 16))
+def test_pareto_front_permutation_invariant(pts, seed):
+    shuffled = list(pts)
+    np.random.default_rng(seed).shuffle(shuffled)
+    assert _front_set(pts) == _front_set(shuffled)
+
+
+@settings(deadline=None)
+@given(_points, _points)
+def test_pareto_front_union_stability(a, b):
+    partial = list(_front_set(a)) + list(_front_set(b))
+    assert _front_set(partial) == _front_set(list(a) + list(b))
+
+
+# --------------------------------------------------------------------------
+# hypervolume_2d
+# --------------------------------------------------------------------------
+
+@settings(deadline=None)
+@given(_points)
+def test_hypervolume_nonnegative_and_front_equivalent(pts):
+    ref = (101.0, 101.0)                       # strictly beyond every point
+    hv = hypervolume_2d(pts, ref)
+    assert hv >= 0.0
+    front = pareto_front(pts, key=lambda q: q)
+    assert abs(hypervolume_2d(front, ref) - hv) <= 1e-9 * max(hv, 1.0)
+
+
+@settings(deadline=None)
+@given(_points, st.tuples(_coord, _coord))
+def test_hypervolume_monotone_under_insertion(pts, p):
+    ref = (101.0, 101.0)
+    before = hypervolume_2d(pts, ref)
+    after = hypervolume_2d(list(pts) + [p], ref)
+    assert after >= before - 1e-9 * max(before, 1.0)
+
+
+# --------------------------------------------------------------------------
+# NSGA-II engine invariants
+# --------------------------------------------------------------------------
+
+def _drive(seed: int) -> NSGA2Search:
+    space = DesignSpace(tuple(Dim(f"x{i}", tuple(range(6)))
+                              for i in range(4)))
+    eng = NSGA2Search(space, SearchSpec(population=12, generations=6,
+                                        seed=seed, patience=100))
+    while not eng.done:
+        asked = eng.ask()
+        eng.tell({g: ((float(sum(g)),
+                       float(sum((5 - x) ** 2 for x in g))), 0.0)
+                  for g in asked})
+    return eng
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=2 ** 16))
+def test_nsga2_archive_hypervolume_non_decreasing(seed):
+    eng = _drive(seed)
+    hist = eng.hv_history
+    assert len(hist) == eng.generation
+    assert all(h2 >= h1 - 1e-12 for h1, h2 in zip(hist, hist[1:]))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=2 ** 16))
+def test_nsga2_same_seed_bit_identical_front(seed):
+    a, b = _drive(seed), _drive(seed)
+    assert a.front() == b.front()
+    assert a.hv_history == b.hv_history
+    assert a.parents == b.parents
+    assert a.n_asked == b.n_asked
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=2 ** 16))
+def test_nsga2_respects_evaluation_budget(seed):
+    space = DesignSpace(tuple(Dim(f"x{i}", tuple(range(6)))
+                              for i in range(4)))
+    eng = NSGA2Search(space, SearchSpec(population=12, generations=50,
+                                        seed=seed, patience=100,
+                                        max_evaluations=30))
+    while not eng.done:
+        asked = eng.ask()
+        eng.tell({g: ((float(sum(g)), float(-min(g))), 0.0) for g in asked})
+    assert eng.n_asked <= 30
+    assert len(eng.cache) <= 30
