@@ -30,6 +30,9 @@ SUITES = {
     "fig7": fig7_dse_pareto.run,
     "fig8": fig8_scaling.run,
     "table2": table2_adaptation.run,
+    # the header-adaptation row alone (42B Ethernet vs co-designed layout,
+    # domination + stage-2 throughput bars) — cheap enough for CI smoke
+    "table2_header": table2_adaptation.header_adaptation,
     "roofline": roofline_table.run,
     "moe_fabric": moe_fabric.run,
     "dse_throughput": dse_throughput.run,

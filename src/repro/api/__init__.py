@@ -10,12 +10,12 @@ is the ``spac`` console entry point.
 from .registry import ScenarioRegistry, registry
 from .runner import (CampaignReport, ScenarioReport, build_bound,
                      build_problem, run_campaign, run_scenario)
-from .scenario import (CommModelSpec, Fidelity, PROTOCOL_BUILDERS,
+from .scenario import (CommModelSpec, Fidelity, FieldSpec, PROTOCOL_BUILDERS,
                        ProtocolSpec, Scenario, SearchSpec, TraceSpec)
 
 __all__ = [
-    "CampaignReport", "CommModelSpec", "Fidelity", "PROTOCOL_BUILDERS",
-    "ProtocolSpec", "Scenario", "ScenarioRegistry", "ScenarioReport",
-    "SearchSpec", "TraceSpec", "build_bound", "build_problem", "registry",
-    "run_campaign", "run_scenario",
+    "CampaignReport", "CommModelSpec", "Fidelity", "FieldSpec",
+    "PROTOCOL_BUILDERS", "ProtocolSpec", "Scenario", "ScenarioRegistry",
+    "ScenarioReport", "SearchSpec", "TraceSpec", "build_bound",
+    "build_problem", "registry", "run_campaign", "run_scenario",
 ]

@@ -5,6 +5,7 @@
     spac run hft --sla-p99-ns 5000             # one scenario, with overrides
     spac run my_scenario.json --out report.json
     spac run hft --search nsga2 --generations 10 --search-seed 0
+    spac run hft --search nsga2 --co-design      # protocol layout in the genome
     spac run hft --search nsga2 --checkpoint-dir ckpt && \
         spac run hft --search nsga2 --checkpoint-dir ckpt --resume
     spac sweep hft underwater industry         # campaign over registry names
@@ -135,19 +136,41 @@ def _apply_overrides(scenario, args):
     if trace_params and scenario.domain != "switch":
         raise SystemExit("trace overrides only apply to switch-domain scenarios")
     budget_limits = _parse_kv(getattr(args, "budget", None))
-    return scenario.override(
-        search=_search_override(scenario, args),
-        sla_p99_latency_ns=args.sla_p99_ns,
-        sla_drop_rate=args.sla_drop_rate,
-        sla_min_throughput_gbps=args.sla_min_gbps,
-        trace_params=trace_params or None,
-        budget_limits={k: float(v) for k, v in budget_limits.items()} or None,
-        back_annotation=args.back_annotation,
-        delta=args.delta,
-        top_k=args.top_k,
-        verify_engine=args.verify_engine,
-        flit_bits=args.flit_bits,
-    )
+    search = _search_override(scenario, args)
+    co_design = getattr(args, "co_design", None)
+    try:
+        out = scenario.override(
+            search=search,
+            sla_p99_latency_ns=args.sla_p99_ns,
+            sla_drop_rate=args.sla_drop_rate,
+            sla_min_throughput_gbps=args.sla_min_gbps,
+            trace_params=trace_params or None,
+            budget_limits={k: float(v) for k, v in budget_limits.items()} or None,
+            back_annotation=args.back_annotation,
+            delta=args.delta,
+            top_k=args.top_k,
+            verify_engine=args.verify_engine,
+            flit_bits=args.flit_bits,
+            co_design=co_design,
+        )
+    except ValueError as e:
+        # user-input problems (unwidenable builder, un-narrowable ranged
+        # spec, bad trace override) exit cleanly like every other CLI error
+        raise SystemExit(str(e)) from e
+    if out.co_design:
+        # whether co-design came from --co-design or from the scenario file,
+        # the joint space needs a search engine and a searchable protocol —
+        # fail here, cleanly, not as a build_problem traceback mid-run
+        if out.search is None:
+            raise SystemExit(
+                f"scenario {out.name!r} has co-design on but no search "
+                "spec: add --search nsga2 (the joint protocol x "
+                "architecture space is not enumerable)")
+        try:
+            out.protocol.space()
+        except ValueError as e:
+            raise SystemExit(str(e)) from e
+    return out
 
 
 def _add_override_flags(p: argparse.ArgumentParser) -> None:
@@ -203,6 +226,12 @@ def _add_override_flags(p: argparse.ArgumentParser) -> None:
     gs.add_argument("--resume", action="store_true",
                     help="resume a checkpointed search from its "
                          "checkpoint directory")
+    gs.add_argument("--co-design", action=argparse.BooleanOptionalAction,
+                    default=None, dest="co_design",
+                    help="search the protocol layout jointly with the "
+                         "architecture: per-field width genes join the "
+                         "genome (point protocol specs widen to the default "
+                         "co-design menus; needs --search)")
 
 
 def build_parser() -> argparse.ArgumentParser:

@@ -49,6 +49,24 @@ def build_bound(scenario: Scenario) -> BoundProtocol:
                 flit_bits=scenario.flit_bits)
 
 
+def _validate_addressing(scenario: Scenario, bound: BoundProtocol) -> None:
+    """Fail at scenario-build time if an address field cannot address every
+    port — ``compressed_protocol(addr_bits=2)`` on an 8-port scenario used to
+    run (and silently alias destinations via ``dst % n_ports``).  Same rule
+    the co-design stage-1 prune applies (``address_width_error``)."""
+    from repro.core.dsl import address_width_error
+    n = scenario.arch.n_ports
+    for sem in ("routing_key", "src_key"):
+        if not bound.has(sem):
+            continue
+        f = bound.protocol.field(bound.semantics[sem])
+        err = address_width_error(sem, f.name, f.bits, n)
+        if err is not None:
+            raise ValueError(
+                f"scenario {scenario.name!r}: protocol "
+                f"{bound.protocol.name!r} {err}; widen the field")
+
+
 def _default_budget(scenario: Scenario) -> ResourceBudget:
     if scenario.domain == "comm":
         return ResourceBudget({"bytes_per_device": 4e9})
@@ -94,8 +112,24 @@ def build_problem(
     if scenario.domain == "comm":
         return _build_comm_problem(scenario), scenario.sla, budget
     from repro.sim.switch_problem import SwitchDSEProblem
-    bound = build_bound(scenario)
     tr = trace if trace is not None else scenario.trace.build()
+    if scenario.co_design:
+        if scenario.search is None:
+            raise ValueError(
+                f"scenario {scenario.name!r}: co_design joint spaces are "
+                "generational-search territory — set a SearchSpec "
+                "(spac run --co-design --search nsga2)")
+        problem = SwitchDSEProblem(
+            scenario.arch, None, tr,
+            back_annotation=scenario.fidelity.back_annotation,
+            features=features,
+            verify_engine=scenario.fidelity.verify_engine,
+            protocol_space=scenario.protocol.space(),
+            binding=scenario.semantic_binding(),
+            flit_bits=scenario.flit_bits)
+        return problem, scenario.sla, budget
+    bound = build_bound(scenario)
+    _validate_addressing(scenario, bound)
     problem = SwitchDSEProblem(
         scenario.arch, bound, tr,
         back_annotation=scenario.fidelity.back_annotation,
@@ -119,6 +153,20 @@ def _verify_dict(v: VerifyResult) -> Dict[str, float]:
         "mean_latency_ns": float(v.mean_latency_ns),
         "drop_rate": float(v.drop_rate),
         "throughput_gbps": float(v.throughput_gbps),
+    }
+
+
+def _protocol_dict(bound: Optional[BoundProtocol]) -> Optional[Dict[str, Any]]:
+    """The winning wire layout, serialized field-by-field (report/golden)."""
+    if bound is None:
+        return None
+    p = bound.protocol
+    return {
+        "name": p.name,
+        "header_bits": int(p.header_bits),
+        "header_bytes": int(p.header_bytes),
+        "fields": [{"name": f.name, "bits": f.bits, "semantic": f.semantic}
+                   for f in p.fields],
     }
 
 
@@ -156,10 +204,29 @@ class ScenarioReport:
         return {k: float(v)
                 for k, v in self.problem.resources(self.result.best).items()}
 
+    @property
+    def stage2_cands_per_sec(self) -> float:
+        return self.stage2_candidates / max(self.stage2_time_s, 1e-12)
+
+    @property
+    def best_bound(self) -> Optional[BoundProtocol]:
+        """The winning design's bound protocol: the co-design candidate's own
+        decoded layout, or the scenario's fixed protocol (switch domain)."""
+        if self.result.best is None:
+            return None
+        own = getattr(self.result.best, "bound", None)
+        return own if own is not None else getattr(self.problem, "bound", None)
+
     def summary(self) -> str:
         head = (f"scenario {self.scenario.name!r} [{self.scenario.domain}] "
                 f"({self.wall_time_s:.2f}s)")
         lines = [head, self.result.summary()]
+        bound = self.best_bound
+        if bound is not None and self.scenario.co_design:
+            p = bound.protocol
+            lines.append(
+                f"  protocol: {p.name} — {p.header_bits} header bits "
+                f"({p.header_bytes} B on the wire)")
         res = self.resources
         if res:
             lines.append("  resources: " + " ".join(
@@ -172,6 +239,7 @@ class ScenarioReport:
             "best": _short(self.result.best) if self.result.best is not None else None,
             "best_verify": (_verify_dict(self.result.best_verify)
                             if self.result.best_verify is not None else None),
+            "best_protocol": _protocol_dict(self.best_bound),
             "resources": self.resources,
             "pareto": [
                 {"candidate": _short(a), **_verify_dict(v)}
@@ -362,6 +430,7 @@ def _switch_group_key(s: Scenario) -> str:
         "flit_bits": s.flit_bits,
         "binding": s.binding,
         "back_annotation": s.fidelity.back_annotation,
+        "co_design": s.co_design,
     }, sort_keys=True)
 
 

@@ -22,15 +22,19 @@ structural and survives the JSON round-trip bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import json
 import math
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 from repro.core.archspec import (AUTO, ArchRequest, CustomKernelSpec,
                                  ForwardTableKind, SchedulerKind, VOQKind)
 from repro.core.binding import KNOWN_SEMANTICS, SemanticBinding
 from repro.core.dse import ResourceBudget, SLA, VERIFY_ENGINES
-from repro.core.dsl import (Field, Protocol, compressed_protocol,
+from repro.core.dsl import (CODESIGN_ADDR_CHOICES, CODESIGN_LENGTH_CHOICES,
+                            CODESIGN_QOS_CHOICES, CODESIGN_SEQ_CHOICES, Field,
+                            FieldSpec, Protocol, ProtocolSpace,
+                            compressed_protocol, compressed_protocol_space,
                             ethernet_ipv4_udp)
 from repro.core.search import SearchSpec
 
@@ -39,6 +43,7 @@ __all__ = [
     "TraceSpec",
     "CommModelSpec",
     "Fidelity",
+    "FieldSpec",
     "Scenario",
     "SearchSpec",
     "PROTOCOL_BUILDERS",
@@ -144,14 +149,48 @@ def sla_from_dict(d: Mapping[str, Any]) -> SLA:
 # component specs
 # --------------------------------------------------------------------------
 
+#: default co-design width menus per ``compressed_protocol`` parameter —
+#: what ``ProtocolSpec.widen()`` (and ``spac run --co-design``) opens up
+_WIDEN_CHOICES = {
+    "addr_bits": CODESIGN_ADDR_CHOICES,
+    "qos_bits": CODESIGN_QOS_CHOICES,
+    "length_bits": CODESIGN_LENGTH_CHOICES,
+    "seq_bits": CODESIGN_SEQ_CHOICES,
+}
+#: the builder's own defaults, read off its signature so they cannot drift
+_COMPRESSED_DEFAULTS = {
+    k: p.default
+    for k, p in inspect.signature(compressed_protocol).parameters.items()
+    if k in ("addr_bits", "qos_bits", "length_bits", "seq_bits")
+}
+
+
+def _as_choices(v):
+    """Width choice lists -> canonical int tuples; everything else verbatim."""
+    if isinstance(v, (list, tuple)) and v \
+            and all(isinstance(x, (int, float)) and not isinstance(x, bool) for x in v):
+        return tuple(int(x) for x in v)
+    return v
+
+
+def _is_choices(v) -> bool:
+    return isinstance(v, tuple) and bool(v) and all(isinstance(x, int) for x in v)
+
+
 @dataclasses.dataclass(frozen=True)
 class ProtocolSpec:
-    """Protocol by stock constructor name + params, or inline field layout."""
+    """Protocol by stock constructor name + params, or inline field layout.
+
+    Any width parameter (and any inline field's ``bits``) may be a *list* of
+    choices instead of a point — the spec then describes a ``ProtocolSpace``
+    (``space()``) the co-design DSE searches jointly with the architecture.
+    Ranged specs serialize exactly like point specs (choices are JSON
+    arrays) and round-trip bit-for-bit."""
 
     builder: str = "compressed_protocol"    # a PROTOCOL_BUILDERS key | "inline"
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     name: Optional[str] = None              # protocol name for inline layouts
-    fields: Optional[Tuple[Field, ...]] = None
+    fields: Optional[Tuple[Union[Field, FieldSpec], ...]] = None
 
     def __post_init__(self):
         if self.builder == "inline":
@@ -161,6 +200,10 @@ class ProtocolSpec:
             raise ValueError(
                 f"unknown protocol builder {self.builder!r}; "
                 f"known: {sorted(PROTOCOL_BUILDERS)} or 'inline'")
+        # canonical form: ranged width params are int tuples (lists arrive
+        # from JSON); non-numeric sequences (extra_fields) pass through
+        params = {k: _as_choices(v) for k, v in self.params.items()}
+        object.__setattr__(self, "params", params)
 
     @staticmethod
     def inline(protocol: Protocol) -> "ProtocolSpec":
@@ -168,21 +211,76 @@ class ProtocolSpec:
         return ProtocolSpec(builder="inline", name=protocol.name,
                             fields=tuple(protocol.fields))
 
+    # ----------------------------------------------------------- point vs space
+    @property
+    def is_space(self) -> bool:
+        """True iff any parameter/field carries more than a point value."""
+        if any(_is_choices(v) for v in self.params.values()):
+            return True
+        return any(isinstance(f, FieldSpec) for f in (self.fields or ()))
+
     def build(self) -> Protocol:
+        if self.is_space:
+            raise ValueError(
+                "ranged ProtocolSpec describes a protocol *space*, not one "
+                "protocol; run the scenario with co_design=True (spac run "
+                "--co-design) or pin every width to a single value")
         if self.builder == "inline":
             return Protocol(self.name or "inline", self.fields)
         return PROTOCOL_BUILDERS[self.builder](**dict(self.params))
 
+    def space(self) -> ProtocolSpace:
+        """The spec as a ``ProtocolSpace`` (point params become single-choice
+        dimensions)."""
+        if self.builder == "inline":
+            specs = tuple(f if isinstance(f, FieldSpec) else FieldSpec.fixed(f)
+                          for f in self.fields)
+            return ProtocolSpace(self.name or "inline", specs)
+        if self.builder == "compressed_protocol":
+            p = dict(self.params)
+            name = p.pop("name", "spac_compressed")
+            extra = tuple(p.pop("extra_fields", ()))
+            kw = {k: p.pop(k, _COMPRESSED_DEFAULTS[k])
+                  for k in _COMPRESSED_DEFAULTS}
+            if p:
+                raise ValueError(f"unknown compressed_protocol params {sorted(p)}")
+            return compressed_protocol_space(name=name, extra_fields=extra, **kw)
+        raise ValueError(
+            f"protocol builder {self.builder!r} has a fixed layout and no "
+            "searchable space; use the compressed_protocol builder or inline "
+            "FieldSpec fields for co-design")
+
+    def widen(self) -> "ProtocolSpec":
+        """Open the default co-design width menus around a point spec (the
+        ``--co-design`` CLI toggle): each ``compressed_protocol`` width
+        parameter becomes its default choice set, always including the
+        pinned value so the original layout stays reachable."""
+        if self.is_space:
+            return self
+        if self.builder != "compressed_protocol":
+            raise ValueError(
+                f"cannot widen builder {self.builder!r}; co-design default "
+                "ranges exist for compressed_protocol only — give explicit "
+                "ranged params or inline FieldSpec fields")
+        params = dict(self.params)
+        for k, menu in _WIDEN_CHOICES.items():
+            pinned = int(params.get(k, _COMPRESSED_DEFAULTS[k]))
+            params[k] = tuple(sorted(set(menu) | {pinned}))
+        return dataclasses.replace(self, params=params)
+
+    # -------------------------------------------------------- serialization
     def to_dict(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {"builder": self.builder}
         if self.params:
-            d["params"] = dict(self.params)
+            d["params"] = {k: list(v) if isinstance(v, tuple) else v
+                           for k, v in self.params.items()}
         if self.name is not None:
             d["name"] = self.name
         if self.fields is not None:
             d["fields"] = [
-                {"name": f.name, "bits": f.bits, "semantic": f.semantic,
-                 "default": f.default}
+                {"name": f.name,
+                 "bits": list(f.bits) if isinstance(f, FieldSpec) else f.bits,
+                 "semantic": f.semantic, "default": f.default}
                 for f in self.fields
             ]
         return d
@@ -190,11 +288,17 @@ class ProtocolSpec:
     @staticmethod
     def from_dict(d: Mapping[str, Any]) -> "ProtocolSpec":
         fields = d.get("fields")
+        if fields is not None:
+            fields = tuple(
+                FieldSpec(f["name"], tuple(f["bits"]), f.get("semantic"),
+                          f.get("default", 0))
+                if isinstance(f["bits"], (list, tuple)) else Field(**f)
+                for f in fields)
         return ProtocolSpec(
             builder=d.get("builder", "compressed_protocol"),
             params=dict(d.get("params", {})),
             name=d.get("name"),
-            fields=tuple(Field(**f) for f in fields) if fields is not None else None,
+            fields=fields,
         )
 
 
@@ -325,6 +429,10 @@ class Scenario:
     #: None -> exhaustive enumeration (stages 1-2); a SearchSpec -> the
     #: seeded generational NSGA-II engine over the problem's space()
     search: Optional[SearchSpec] = None
+    #: protocol/architecture co-design: the protocol spec's width ranges
+    #: become genes next to the architecture genes (switch domain + search
+    #: only; ``override(co_design=True)`` widens a point spec automatically)
+    co_design: bool = False
     notes: str = ""
 
     def __post_init__(self):
@@ -338,6 +446,15 @@ class Scenario:
         if unknown:
             raise ValueError(f"scenario {self.name!r}: unknown binding "
                              f"semantics {sorted(unknown)}")
+        if self.co_design:
+            if self.domain != "switch":
+                raise ValueError(f"scenario {self.name!r}: co_design applies "
+                                 "to the switch domain only")
+            if not self.protocol.is_space:
+                raise ValueError(
+                    f"scenario {self.name!r}: co_design=True needs ranged "
+                    "protocol params (list-valued widths) — "
+                    "override(co_design=True) widens the defaults")
 
     # ------------------------------------------------------------- building
     def semantic_binding(self) -> SemanticBinding:
@@ -365,6 +482,8 @@ class Scenario:
                                       for k, v in self.budget.limits.items()}}
         if self.search is not None:
             d["search"] = self.search.to_dict()
+        if self.co_design:
+            d["co_design"] = True
         if self.notes:
             d["notes"] = self.notes
         return d
@@ -390,6 +509,7 @@ class Scenario:
                     if budget is not None else None),
             fidelity=Fidelity.from_dict(d.get("fidelity", {})),
             search=SearchSpec.from_dict(search) if search is not None else None,
+            co_design=bool(d.get("co_design", False)),
             notes=d.get("notes", ""),
         )
 
@@ -424,9 +544,15 @@ class Scenario:
         top_k: Optional[int] = None,
         verify_engine: Optional[str] = None,
         flit_bits: Optional[int] = None,
+        co_design: Optional[bool] = None,
         name: Optional[str] = None,
     ) -> "Scenario":
-        """Return a copy with the given knobs replaced (CLI flag surface)."""
+        """Return a copy with the given knobs replaced (CLI flag surface).
+
+        ``co_design=True`` on a point protocol spec widens it with the
+        default co-design width menus (``ProtocolSpec.widen``), so
+        ``registry["hft"].override(co_design=True, search=...)`` is the whole
+        Table II header-adaptation experiment."""
         sla = SLA(
             p99_latency_ns=(self.sla.p99_latency_ns
                             if sla_p99_latency_ns is None else sla_p99_latency_ns),
@@ -456,9 +582,23 @@ class Scenario:
             verify_engine=(self.fidelity.verify_engine
                            if verify_engine is None else verify_engine),
         )
+        cd = self.co_design if co_design is None else co_design
+        protocol = self.protocol
+        if cd and not protocol.is_space:
+            protocol = protocol.widen()
+        elif co_design is False and protocol.is_space:
+            # widening is lossy (the pinned point joins a menu), so there is
+            # no way back — fail here with guidance instead of later with a
+            # "turn co-design on" message that contradicts the user's ask
+            raise ValueError(
+                f"scenario {self.name!r}: cannot disable co-design on a "
+                "ranged protocol spec (the original point widths are not "
+                "recorded); pin each width to a single value or rebuild "
+                "the scenario from the registry")
         return dataclasses.replace(
             self, sla=sla, trace=trace, budget=budget, fidelity=fid,
             search=self.search if search is _KEEP else search,
             flit_bits=self.flit_bits if flit_bits is None else flit_bits,
+            co_design=cd, protocol=protocol,
             name=self.name if name is None else name,
         )

@@ -38,10 +38,14 @@ from .dse import (
 from .dsl import (
     ETHERNET_HEADER_BYTES,
     Field,
+    FieldSpec,
     ParserPlan,
     Protocol,
+    ProtocolSpace,
     compressed_protocol,
+    compressed_protocol_space,
     ethernet_ipv4_udp,
+    layout_key,
 )
 from .features import TraceFeatures, analyze
 from .pareto import hypervolume_2d, is_dominated, pareto_front
@@ -59,12 +63,14 @@ from .search import (
 __all__ = [
     "AUTO", "ArchRequest", "BUS_WIDTHS", "BoundProtocol", "CustomKernelSpec",
     "DSEProblem", "DSEResult", "DesignSpace", "Dim", "ETHERNET_HEADER_BYTES",
-    "Field", "ForwardTableKind", "NSGA2Search", "ParserPlan", "Protocol",
-    "ResourceBudget", "SLA", "SchedulerKind", "SearchDriver", "SearchOutcome",
-    "SearchSpec", "SemanticBinding", "StageLog", "SurrogateResult",
-    "SwitchArch", "TraceFeatures", "VOQKind", "VerifyResult", "analyze", "bind",
-    "compressed_protocol", "depth_for_drop_rate", "enumerate_candidates",
+    "Field", "FieldSpec", "ForwardTableKind", "NSGA2Search", "ParserPlan",
+    "Protocol", "ProtocolSpace", "ResourceBudget", "SLA", "SchedulerKind",
+    "SearchDriver", "SearchOutcome", "SearchSpec", "SemanticBinding",
+    "StageLog", "SurrogateResult", "SwitchArch", "TraceFeatures", "VOQKind",
+    "VerifyResult", "analyze", "bind", "compressed_protocol",
+    "compressed_protocol_space", "depth_for_drop_rate", "enumerate_candidates",
     "ethernet_ipv4_udp", "evaluate_space", "finalize_result", "hypervolume_2d",
-    "is_dominated", "pareto_front", "run_dse", "run_search", "stage1_static",
-    "stage2_screen", "stage3_size", "stage3_verify", "stage4_verify",
+    "is_dominated", "layout_key", "pareto_front", "run_dse", "run_search",
+    "stage1_static", "stage2_screen", "stage3_size", "stage3_verify",
+    "stage4_verify",
 ]

@@ -8,11 +8,13 @@ from .engines import ENGINES, EngineSpec, get_engine, ladder, register_engine
 from .netsim import NetSimConfig, run_netsim
 from .resources import ALVEO_U45N, ResourceReport, estimate_quick, synthesize
 from .surrogate import run_surrogate
-from .switch_problem import SwitchDSEProblem, align_depth_to_bram, optimize_switch
+from .switch_problem import (CoDesignCandidate, SwitchDSEProblem,
+                             align_depth_to_bram, optimize_switch)
 
 __all__ = [
-    "ALVEO_U45N", "BatchedSurrogateResult", "ENGINES", "EngineSpec",
-    "HardwareParams", "NetSimConfig", "ResourceReport", "SwitchDSEProblem",
+    "ALVEO_U45N", "BatchedSurrogateResult", "CoDesignCandidate", "ENGINES",
+    "EngineSpec", "HardwareParams", "NetSimConfig", "ResourceReport",
+    "SwitchDSEProblem",
     "align_depth_to_bram", "analytic_eta", "annotate", "estimate_quick",
     "get_engine", "ladder", "optimize_switch", "register_engine", "run_netsim",
     "run_netsim_batched", "run_surrogate", "run_surrogate_batched",

@@ -51,7 +51,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -132,15 +132,19 @@ def _empty_result(hw: HardwareParams) -> VerifyResult:
               "hw": hw, "engine": "batched_netsim"})
 
 
-def _run_group(archs, bound, trace, hw_list, cfg) -> List[VerifyResult]:
-    """All candidates share n_ports; every other parameter is a batch axis."""
+def _run_group(archs, bounds, trace, hw_list, cfg) -> List[VerifyResult]:
+    """All candidates share n_ports *and* header wire-bytes; every other
+    parameter is a batch axis.  The header width is structural here — unlike
+    stage 2, the event timeline (host-NIC serialisation) depends on wire
+    size, so mixed-header co-design batches are partitioned by
+    ``header_bytes`` upstream and each partition shares one timeline."""
     n = archs[0].n_ports
     t0 = np.asarray(trace.time_s, np.float64)
     src = np.asarray(trace.src, np.int64) % n
     dst = np.asarray(trace.dst, np.int64) % n
     payload = np.asarray(trace.payload_bytes, np.int64)
     m = t0.size
-    wire = payload + bound.header_bytes
+    wire = payload + bounds[0].header_bytes
     link_bps = trace.link_gbps * 1e9
     b_n = len(archs)
     if m == 0:
@@ -174,7 +178,7 @@ def _run_group(archs, bound, trace, hw_list, cfg) -> List[VerifyResult]:
     t0_min = float(t0.min())
     wire_e = wire[order]
     out: List[VerifyResult] = []
-    for b, (arch, hw) in enumerate(zip(archs, hw_list)):
+    for b, (arch, bound, hw) in enumerate(zip(archs, bounds, hw_list)):
         fallback = None
         if int(depth[b]) < 1:
             # degenerate depth<=0: serial semantics drop every packet; the
@@ -214,7 +218,7 @@ def _run_group(archs, bound, trace, hw_list, cfg) -> List[VerifyResult]:
 
 def run_netsim_batched(
     archs: Sequence[SwitchArch],
-    bound: BoundProtocol,
+    bound: Union[BoundProtocol, Sequence[BoundProtocol]],
     trace,
     *,
     hw: Optional[Sequence[HardwareParams]] = None,
@@ -226,9 +230,12 @@ def run_netsim_batched(
 
     Results are index-aligned with ``archs`` and, candidate by candidate,
     bit-identical to ``run_netsim`` (same drop counts, same delivered set,
-    same latency array).  Candidates may mix every architectural policy and
-    any sized VOQ depth; only ``n_ports`` is structural, so mixed-port
-    batches are partitioned internally and stitched back in input order.
+    same latency array).  ``bound`` is one ``BoundProtocol`` or a per-
+    candidate sequence (the co-design DSE's mixed header widths); candidates
+    may mix every architectural policy and any sized VOQ depth.  ``n_ports``
+    and header wire-bytes are structural (the event timeline depends on
+    both), so mixed batches are partitioned internally by
+    ``(n_ports, header_bytes)`` and stitched back in input order.
 
     Memory: the scan carries a ``[B, N², min(max_depth, m)]`` float64 ring of
     departure times — ~34 MB for 64 candidates at 8 ports and depth 1024;
@@ -236,30 +243,36 @@ def run_netsim_batched(
     """
     if cfg is None:
         cfg = NetSimConfig()
-    if cfg.retransmit and bound.has("seq_no"):
+    archs = list(archs)
+    bounds = (list(bound) if isinstance(bound, (list, tuple))
+              else [bound] * len(archs))
+    if len(bounds) != len(archs):
+        raise ValueError(f"bound has {len(bounds)} entries for {len(archs)} "
+                         "archs; they must be index-aligned")
+    if cfg.retransmit and any(b.has("seq_no") for b in bounds):
         raise NotImplementedError(
             "driver-level retransmission inserts events dynamically; "
             "fall back to the serial run_netsim for retransmitting configs")
-    archs = list(archs)
     if not archs:
         return []
     if hw is None:
         source = "cycle_sim" if back_annotation else "model"
-        hw = [annotate(a, bound, source=source, i_burst=i_burst) for a in archs]
+        hw = [annotate(a, b, source=source, i_burst=i_burst)
+              for a, b in zip(archs, bounds)]
     hw = list(hw)
     if len(hw) != len(archs):
         raise ValueError(f"hw has {len(hw)} entries for {len(archs)} archs; "
                          "they must be index-aligned")
 
-    groups: Dict[int, List[int]] = {}
+    groups: Dict[Tuple[int, int], List[int]] = {}
     for i, a in enumerate(archs):
-        groups.setdefault(a.n_ports, []).append(i)
+        groups.setdefault((a.n_ports, bounds[i].header_bytes), []).append(i)
     if len(groups) == 1:
-        return _run_group(archs, bound, trace, hw, cfg)
+        return _run_group(archs, bounds, trace, hw, cfg)
     out: List[Optional[VerifyResult]] = [None] * len(archs)
     for idx in groups.values():
-        part = _run_group([archs[i] for i in idx], bound, trace,
-                          [hw[i] for i in idx], cfg)
+        part = _run_group([archs[i] for i in idx], [bounds[i] for i in idx],
+                          trace, [hw[i] for i in idx], cfg)
         for i, v in zip(idx, part):
             out[i] = v
     return out

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -158,9 +158,13 @@ class BatchedSurrogateResult:
         return out
 
 
-def _run_group(archs, bound, trace, hw_list, use_pallas, interpret, precision,
+def _run_group(archs, bounds, trace, hw_list, use_pallas, interpret, precision,
                quantiles):
-    """All candidates share n_ports; every other parameter is a batch axis."""
+    """All candidates share n_ports; every other parameter — including the
+    protocol's header wire-bytes under co-design — is a batch axis.  The
+    shared arrival timeline is the trace's (candidate-independent), so mixed
+    header widths still ride one jitted scan: the header only reshapes the
+    per-candidate service times and delivered wire bits."""
     n = archs[0].n_ports
     t = np.asarray(trace.time_s, np.float64)
     src = np.asarray(trace.src, np.int64) % n
@@ -172,11 +176,20 @@ def _run_group(archs, bound, trace, hw_list, use_pallas, interpret, precision,
     m = t.size
 
     b_n = len(archs)
-    wire_bytes = payload + bound.header_bytes
     svc = np.empty((b_n, m), np.float64)
     pipe_s = np.empty(b_n, np.float64)
     feasible = np.empty(b_n, bool)
-    for b, (arch, hw) in enumerate(zip(archs, hw_list)):
+    wire_bits = np.empty(b_n, np.float64)
+    # one wire-size array per distinct header width: classic shared-bound
+    # batches pay for it once, co-design pays once per layout width
+    wire_cache: Dict[int, Any] = {}
+    for b, (arch, bound, hw) in enumerate(zip(archs, bounds, hw_list)):
+        cached = wire_cache.get(bound.header_bytes)
+        if cached is None:
+            wb = payload + bound.header_bytes
+            cached = (wb, float(wb.sum() * 8))
+            wire_cache[bound.header_bytes] = cached
+        wire_bytes, wire_bits[b] = cached
         flit_bytes = arch.bus_bits // 8
         size_flits = np.maximum(1, -(-wire_bytes // flit_bytes))
         svc[b] = (size_flits + hw.ingress_stall_cycles) / (hw.fclk_hz * hw.eta)
@@ -192,7 +205,7 @@ def _run_group(archs, bound, trace, hw_list, use_pallas, interpret, precision,
         dt = np.diff(t, prepend=t[:1])
         args = (dt.astype(dtype), src.astype(np.int32), dst.astype(np.int32),
                 svc.astype(dtype), t.astype(dtype),
-                np.float64(wire_bytes.sum() * 8).astype(dtype))
+                wire_bits.astype(dtype))
         kw = dict(n_ports=n, use_pallas=use_pallas, interpret=interpret)
         if precision == "float64":
             with enable_x64():
@@ -227,7 +240,7 @@ def _run_group(archs, bound, trace, hw_list, use_pallas, interpret, precision,
 
 def run_surrogate_batched(
     archs: Sequence[SwitchArch],
-    bound: BoundProtocol,
+    bound: Union[BoundProtocol, Sequence[BoundProtocol]],
     trace,
     *,
     hw: Optional[Sequence[HardwareParams]] = None,
@@ -239,6 +252,12 @@ def run_surrogate_batched(
     quantiles: Sequence[float] = DEFAULT_QUANTILES,
 ) -> BatchedSurrogateResult:
     """Evaluate a whole candidate batch against one shared trace.
+
+    ``bound`` is one ``BoundProtocol`` shared by the batch, or — for the
+    protocol/architecture co-design DSE — a per-candidate sequence (index-
+    aligned with ``archs``): header wire-bytes then become a batch axis like
+    bus width and η, and the batch still costs one jitted scan (the arrival
+    timeline is the trace's, never rebuilt per candidate).
 
     Candidates may mix every architectural policy; only ``n_ports`` is a
     structural axis, so mixed-port batches are partitioned internally and the
@@ -259,6 +278,11 @@ def run_surrogate_batched(
         # downcast would betray the documented bit-exactness of the f64 path
         precision = "float32"
     archs = list(archs)
+    bounds = (list(bound) if isinstance(bound, (list, tuple))
+              else [bound] * len(archs))
+    if len(bounds) != len(archs):
+        raise ValueError(f"bound has {len(bounds)} entries for {len(archs)} "
+                         "archs; they must be index-aligned")
     if not archs:
         return BatchedSurrogateResult(
             archs=[], hw=[], latency_ns=np.zeros((0, 0)),
@@ -268,7 +292,8 @@ def run_surrogate_batched(
             line_rate_feasible=np.zeros(0, bool))
     if hw is None:
         source = "cycle_sim" if back_annotation else "model"
-        hw = [annotate(a, bound, source=source, i_burst=i_burst) for a in archs]
+        hw = [annotate(a, b, source=source, i_burst=i_burst)
+              for a, b in zip(archs, bounds)]
     hw = list(hw)
     if len(hw) != len(archs):
         raise ValueError(f"hw has {len(hw)} entries for {len(archs)} archs; "
@@ -278,11 +303,11 @@ def run_surrogate_batched(
     for i, a in enumerate(archs):
         groups.setdefault(a.n_ports, []).append(i)
     if len(groups) == 1:
-        return _run_group(archs, bound, trace, hw, use_pallas, interpret,
+        return _run_group(archs, bounds, trace, hw, use_pallas, interpret,
                           precision, quantiles)
 
-    parts = {n: _run_group([archs[i] for i in idx], bound, trace,
-                           [hw[i] for i in idx], use_pallas, interpret,
+    parts = {n: _run_group([archs[i] for i in idx], [bounds[i] for i in idx],
+                           trace, [hw[i] for i in idx], use_pallas, interpret,
                            precision, quantiles)
              for n, idx in groups.items()}
     # stitch [B, m] arrays back in input order (m is shared: one trace)

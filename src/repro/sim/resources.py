@@ -51,13 +51,20 @@ class ResourceReport:
 # structural terms (uncalibrated)
 # ---------------------------------------------------------------------------
 
-def _lut_terms(arch: SwitchArch, header_bits: int, straddlers: int) -> float:
+def _lut_terms(arch: SwitchArch, header_bits: int, straddlers: int,
+               key_bits: Optional[int] = None) -> float:
+    """``key_bits`` is the forwarding lookup key width — the *routing field's*
+    width when a decoded protocol is available (a 48 b Ethernet MAC costs a
+    48 b hash/CAM key; a 4 b compressed address costs 4), falling back to the
+    declared ``arch.addr_bits``.  FullLookup stays on ``arch.addr_bits``: its
+    table is direct-indexed by the declared address space."""
     n, w = arch.n_ports, arch.bus_bits
+    key_bits = arch.addr_bits if key_bits is None else key_bits
     parser = n * (80 + 0.2 * header_bits + 0.002 * header_bits * w + 60 * straddlers)
     if arch.fwd is ForwardTableKind.FULL_LOOKUP:
         fwd = 1.2 * (1 << arch.addr_bits) * n
     else:
-        fwd = n * (150 + 60 * arch.hash_banks + 8 * arch.addr_bits)
+        fwd = n * (150 + 60 * arch.hash_banks + 8 * key_bits)
     crossbar = 0.05 * w * n * n
     if arch.voq is VOQKind.NXN:
         voq = 30 * n * n
@@ -73,16 +80,19 @@ def _lut_terms(arch: SwitchArch, header_bits: int, straddlers: int) -> float:
     return parser + fwd + crossbar + voq + sched + meta + kern
 
 
-def _ff_terms(arch: SwitchArch, header_bits: int) -> float:
+def _ff_terms(arch: SwitchArch, header_bits: int, straddlers: int = 0) -> float:
     n, w = arch.n_ports, arch.bus_bits
     stream_regs = 2.0 * n * w              # AXI-Stream pipeline registers
     meta_regs = 1.2 * n * header_bits
+    # a field straddling a flit boundary needs its partial value held across
+    # cycles — per-port state-retention registers (§III-B.1)
+    retention = 32.0 * n * straddlers
     ctrl = 18.0 * n * n
     kern = sum(k.ffs for k in arch.custom_kernels)
-    return stream_regs + meta_regs + ctrl + kern
+    return stream_regs + meta_regs + retention + ctrl + kern
 
 
-def _bram_terms(arch: SwitchArch) -> float:
+def _bram_terms(arch: SwitchArch, key_bits: Optional[int] = None) -> float:
     n, w, d = arch.n_ports, arch.bus_bits, arch.voq_depth
     if arch.voq is VOQKind.NXN:
         data_bits = n * n * d * w
@@ -92,7 +102,8 @@ def _bram_terms(arch: SwitchArch) -> float:
         ptr_bits = n * n * d * (math.ceil(math.log2(max(n * d, 2))) + n)  # ptr + bitmap
     fwd_bits = 0.0
     if arch.fwd is ForwardTableKind.MULTIBANK_HASH:
-        fwd_bits = arch.hash_banks * arch.hash_depth * (arch.addr_bits + 8)
+        kb = arch.addr_bits if key_bits is None else key_bits
+        fwd_bits = arch.hash_banks * arch.hash_depth * (kb + 8)
     io_fifos = 2 * n * w * 32               # ingress/egress skid buffers
     kern = sum(k.brams for k in arch.custom_kernels)
     return (data_bits + ptr_bits + fwd_bits + io_fifos) / BRAM_BITS + kern
@@ -163,7 +174,7 @@ def _calibrate() -> Dict[str, float]:
     ratios = {"luts": [], "ffs": [], "brams": [], "path": []}
     for (arch, hdr), lut_k, ff_k, bram, fmax, _lat in TABLE1_SPAC_ROWS:
         ratios["luts"].append(lut_k * 1e3 / _lut_terms(arch, hdr, straddlers=2))
-        ratios["ffs"].append(ff_k * 1e3 / _ff_terms(arch, hdr))
+        ratios["ffs"].append(ff_k * 1e3 / _ff_terms(arch, hdr, straddlers=2))
         ratios["brams"].append(bram / max(_bram_terms(arch), 1e-9))
         ratios["path"].append((1e3 / fmax) / _critical_path_ns(arch))
     return {k: float(np.exp(np.mean(np.log(v)))) for k, v in ratios.items()}
@@ -176,13 +187,26 @@ _CALIB = _calibrate()
 # public API
 # ---------------------------------------------------------------------------
 
+def _plan_params(arch: SwitchArch, bound: Optional[BoundProtocol]):
+    """(header_bits, straddlers, key_bits) priced from the decoded plan.
+
+    The compiled ``ParserPlan`` carries exactly what the hardware pays for:
+    total header bits, boundary-straddling fields (state retention), and the
+    bound routing field's width (the hash/CAM key).  Without a bound the
+    classic defaults apply (14 B Ethernet-ish header, keys = addr_bits)."""
+    if bound is None:
+        return 8 * 14, 0, None
+    key_bits = (bound.routing_field.bits
+                if "routing_key" in bound.semantics else None)
+    return bound.protocol.header_bits, len(bound.plan.straddling_fields), key_bits
+
+
 def synthesize(arch: SwitchArch, bound: Optional[BoundProtocol] = None) -> ResourceReport:
     """Calibrated model — the repo's stand-in for a Vitis post-synthesis report."""
-    header_bits = bound.protocol.header_bits if bound else 8 * 14
-    straddlers = len(bound.plan.straddling_fields) if bound else 0
-    luts = _CALIB["luts"] * _lut_terms(arch, header_bits, straddlers)
-    ffs = _CALIB["ffs"] * _ff_terms(arch, header_bits)
-    brams = _CALIB["brams"] * _bram_terms(arch)
+    header_bits, straddlers, key_bits = _plan_params(arch, bound)
+    luts = _CALIB["luts"] * _lut_terms(arch, header_bits, straddlers, key_bits)
+    ffs = _CALIB["ffs"] * _ff_terms(arch, header_bits, straddlers)
+    brams = _CALIB["brams"] * _bram_terms(arch, key_bits)
     path_ns = _CALIB["path"] * _critical_path_ns(arch)
     fmax = min(1e3 / path_ns, 350.0)                 # 350 MHz target clock cap
     cycles = _pipeline_cycles(arch, fmax)
@@ -200,12 +224,11 @@ def estimate_quick(arch: SwitchArch, bound: Optional[BoundProtocol] = None) -> R
     Differs from ``synthesize`` by rounded scale factors — the gap between the
     two fidelities is what Fig. 6's MAPE experiment measures.
     """
-    header_bits = bound.protocol.header_bits if bound else 8 * 14
-    straddlers = len(bound.plan.straddling_fields) if bound else 0
+    header_bits, straddlers, key_bits = _plan_params(arch, bound)
     rounded = {k: float(f"{v:.1g}") for k, v in _CALIB.items()}
-    luts = rounded["luts"] * _lut_terms(arch, header_bits, straddlers)
-    ffs = rounded["ffs"] * _ff_terms(arch, header_bits)
-    brams = rounded["brams"] * _bram_terms(arch)
+    luts = rounded["luts"] * _lut_terms(arch, header_bits, straddlers, key_bits)
+    ffs = rounded["ffs"] * _ff_terms(arch, header_bits, straddlers)
+    brams = rounded["brams"] * _bram_terms(arch, key_bits)
     path_ns = rounded["path"] * _critical_path_ns(arch)
     fmax = min(1e3 / path_ns, 350.0)
     cycles = _pipeline_cycles(arch, fmax)

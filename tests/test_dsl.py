@@ -59,6 +59,80 @@ def test_pack_unpack_roundtrip(proto, data):
 
 
 @given(_protocols(), st.data())
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_match_reference_oracle(proto, data):
+    """The vectorized numpy-bit-ops path must be byte-for-byte the per-bit
+    reference oracle, both directions."""
+    values = {f.name: data.draw(st.integers(0, (1 << f.bits) - 1)) for f in proto.fields}
+    wire = proto.pack(values)
+    assert wire == proto.pack_reference(values)
+    assert proto.unpack(wire) == proto.unpack_reference(wire) == values
+
+
+@given(_protocols(), st.sampled_from([8, 16, 32, 64, 128, 256, 512]))
+@settings(max_examples=40, deadline=None)
+def test_parser_plan_slices_cover_every_bit_once(proto, flit_bits):
+    """Compiled ``ParserPlan`` slices must tile the header exactly: every
+    header bit in exactly one slice, per-field pieces reassembling the full
+    width, straddlers flagged iff a field crosses a flit boundary."""
+    plan = proto.compile(flit_bits)
+    covered = np.zeros(proto.header_bits, dtype=int)
+    for s in plan.slices:
+        assert 0 <= s.lo <= s.hi < flit_bits
+        width = s.hi - s.lo + 1
+        # stream bit of the slice's MSB: word base + position inside the flit
+        start = s.word * flit_bits + (flit_bits - 1 - s.hi)
+        covered[start:start + width] += 1
+    assert (covered == 1).all()
+    for f in proto.fields:
+        pieces = plan.slices_for(f.name)
+        assert sum(s.hi - s.lo + 1 for s in pieces) == f.bits
+        # dst_shift stitches the pieces MSB-first without gaps or overlaps
+        shifts = sorted((s.dst_shift, s.hi - s.lo + 1) for s in pieces)
+        assert shifts[0][0] == 0
+        acc = 0
+        for shift, width in shifts:
+            assert shift == acc
+            acc += width
+        assert (f.name in plan.straddling_fields) == (len(pieces) > 1 or (
+            proto.offset_of(f.name) // flit_bits
+            != (proto.offset_of(f.name) + f.bits - 1) // flit_bits))
+
+
+# example-based twins: the same invariants stay exercised without hypothesis
+def test_pack_matches_reference_oracle_examples():
+    for proto, values in [
+        (compressed_protocol(addr_bits=4, qos_bits=2, length_bits=6, seq_bits=8),
+         {"dst": 5, "src": 9, "qos": 3, "len": 42, "seq": 200}),
+        (ethernet_ipv4_udp(),
+         {f.name: (1 << f.bits) - 1 for f in ethernet_ipv4_udp().fields}),
+        (Protocol("edge", [Field("a", 64), Field("b", 1), Field("c", 48)]),
+         {"a": (1 << 64) - 1, "b": 1, "c": 0x123456789ABC}),
+    ]:
+        wire = proto.pack(values)
+        assert wire == proto.pack_reference(values)
+        assert proto.unpack(wire) == proto.unpack_reference(wire) == values
+
+
+def test_unpack_rejects_truncated_headers():
+    p = compressed_protocol()            # 2-byte header
+    with pytest.raises(ValueError, match="needs 2 bytes, got 1"):
+        p.unpack(b"\xff")
+    assert p.unpack(p.pack({"dst": 3})) == {"dst": 3, "src": 0, "qos": 0, "len": 0}
+
+
+def test_parser_plan_covers_every_bit_once_examples():
+    for proto, flit in [(ethernet_ipv4_udp(), 256), (ethernet_ipv4_udp(), 64),
+                        (compressed_protocol(addr_bits=4, length_bits=6), 8)]:
+        plan = proto.compile(flit)
+        covered = np.zeros(proto.header_bits, dtype=int)
+        for s in plan.slices:
+            start = s.word * flit + (flit - 1 - s.hi)
+            covered[start:start + (s.hi - s.lo + 1)] += 1
+        assert (covered == 1).all()
+
+
+@given(_protocols(), st.data())
 @settings(max_examples=20, deadline=None)
 def test_vectorised_pack_matches_scalar(proto, data):
     n = 5

@@ -60,6 +60,11 @@ SCENARIOS = {
     "hft_nsga2": lambda: registry["hft"].override(
         back_annotation=False,
         search=SearchSpec(population=16, generations=4, seed=7)),
+    # protocol co-design: the winning layout (name, per-field widths) is part
+    # of the snapshot, so protocol genes are locked down bit-for-bit
+    "hft_codesign": lambda: registry["hft"].override(
+        back_annotation=False, co_design=True,
+        search=SearchSpec(population=16, generations=4, seed=7)),
 }
 
 
