@@ -20,8 +20,8 @@ import time
 import traceback
 
 from . import (dse_throughput, fig1_sensitivity, fig6_fidelity, fig7_dse_pareto,
-               fig8_scaling, moe_fabric, roofline_table, search_quality,
-               table1_resources, table2_adaptation)
+               fig8_scaling, mesh_scaling, moe_fabric, roofline_table,
+               search_quality, table1_resources, table2_adaptation)
 
 SUITES = {
     "table1": table1_resources.run,
@@ -37,6 +37,9 @@ SUITES = {
     "moe_fabric": moe_fabric.run,
     "dse_throughput": dse_throughput.run,
     "search": search_quality.run,
+    # device-mesh sharding: stage-2/stage-4 cand/s over 1/2/4/8 simulated
+    # host devices + bitwise/Pareto identity asserts (subprocess, 8 forced)
+    "mesh_scaling": mesh_scaling.run,
 }
 
 DEFAULT_JSON = "BENCH_dse.json"

@@ -232,6 +232,30 @@ def _add_override_flags(p: argparse.ArgumentParser) -> None:
                          "architecture: per-field width genes join the "
                          "genome (point protocol specs widen to the default "
                          "co-design menus; needs --search)")
+    gm = p.add_argument_group(
+        "device mesh (results are bit-identical at any device count)")
+    gm.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="shard the batched stage-2/stage-4 scans over N "
+                         "devices (default 1 = the serial path; an execution "
+                         "knob, never part of the scenario/report, so "
+                         "checkpoints resume across device counts)")
+    gm.add_argument("--scenario-devices", type=int, default=None, metavar="M",
+                    help="second, data-parallel mesh axis campaigns use to "
+                         "spread scenario groups (total devices = N*M)")
+
+
+def _mesh_from_args(args):
+    """--devices/--scenario-devices -> Optional[MeshSpec] (None = serial)."""
+    devices = getattr(args, "devices", None)
+    scenario_axis = getattr(args, "scenario_devices", None)
+    if devices is None and scenario_axis is None:
+        return None
+    from .scenario import MeshSpec
+    try:
+        spec = MeshSpec(devices=devices or 1, scenario_axis=scenario_axis or 1)
+    except ValueError as e:
+        raise SystemExit(str(e)) from e
+    return None if spec.is_single() else spec
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -301,7 +325,8 @@ def _cmd_run(args) -> int:
     if args.save_config:
         scenario.save(args.save_config)
         print(f"wrote scenario spec to {args.save_config}")
-    report = run_scenario(scenario, verbose=args.verbose, resume=args.resume)
+    report = run_scenario(scenario, verbose=args.verbose, resume=args.resume,
+                          mesh=_mesh_from_args(args))
     print(report.summary())
     if args.out:
         with open(args.out, "w") as f:
@@ -323,7 +348,7 @@ def _cmd_sweep(args) -> int:
         raise SystemExit("sweep needs scenario names or --config FILE")
     scenarios = [_apply_overrides(s, args) for s in scenarios]
     report = run_campaign(scenarios, name=name, verbose=args.verbose,
-                          resume=args.resume)
+                          resume=args.resume, mesh=_mesh_from_args(args))
     print(report.summary())
     if args.out:
         with open(args.out, "w") as f:

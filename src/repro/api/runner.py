@@ -33,7 +33,7 @@ from repro.core.dse import (DSEProblem, DSEResult, ResourceBudget, SLA,
 from repro.core.search import SearchDriver, run_search
 
 from .registry import registry
-from .scenario import Scenario
+from .scenario import MeshSpec, Scenario
 
 __all__ = ["ScenarioReport", "CampaignReport", "build_bound", "build_problem",
            "run_scenario", "run_campaign"]
@@ -102,12 +102,17 @@ def build_problem(
     *,
     trace=None,
     features=None,
+    mesh=None,
 ) -> Tuple[DSEProblem, SLA, ResourceBudget]:
     """Materialise the scenario into a ready-to-run ``DSEProblem``.
 
     ``trace``/``features`` let a campaign hand scenarios that share a
-    ``TraceSpec`` one built trace and one feature analysis.
+    ``TraceSpec`` one built trace and one feature analysis.  ``mesh``
+    (a ``MeshSpec`` or device count) overrides ``scenario.mesh``; either
+    shards the batched stages across the device mesh, with results
+    bit-identical to the serial default.
     """
+    mesh = MeshSpec.coerce(mesh) if mesh is not None else scenario.mesh
     budget = scenario.budget or _default_budget(scenario)
     if scenario.domain == "comm":
         return _build_comm_problem(scenario), scenario.sla, budget
@@ -126,7 +131,8 @@ def build_problem(
             verify_engine=scenario.fidelity.verify_engine,
             protocol_space=scenario.protocol.space(),
             binding=scenario.semantic_binding(),
-            flit_bits=scenario.flit_bits)
+            flit_bits=scenario.flit_bits,
+            mesh=mesh)
         return problem, scenario.sla, budget
     bound = build_bound(scenario)
     _validate_addressing(scenario, bound)
@@ -134,7 +140,8 @@ def build_problem(
         scenario.arch, bound, tr,
         back_annotation=scenario.fidelity.back_annotation,
         features=features,
-        verify_engine=scenario.fidelity.verify_engine)
+        verify_engine=scenario.fidelity.verify_engine,
+        mesh=mesh)
     return problem, scenario.sla, budget
 
 
@@ -340,7 +347,7 @@ def _search_checkpoint_dir(scenario: Scenario, *, campaign: bool = False) -> Opt
 
 
 def run_scenario(scenario: Union[Scenario, str], *, verbose: bool = False,
-                 resume: bool = False) -> ScenarioReport:
+                 resume: bool = False, mesh=None) -> ScenarioReport:
     """One spec in, verified Pareto front out (the quickstart in one call).
 
     Runs the same staged composition as ``run_dse`` (inlined only to time
@@ -352,11 +359,16 @@ def run_scenario(scenario: Union[Scenario, str], *, verbose: bool = False,
     generational NSGA-II engine (``repro.core.search``); the final archive
     feeds the identical stage-3/4 ladder.  ``resume`` continues a
     checkpointed search from ``search.checkpoint_dir``.
+
+    ``mesh`` (a ``MeshSpec`` / device count, winning over ``scenario.mesh``)
+    shards the batched stages across the device mesh without entering the
+    report's scenario dict — reports, including the golden snapshots, are
+    mesh-invariant.
     """
     if isinstance(scenario, str):
         scenario = registry[scenario]
     t0 = time.perf_counter()
-    problem, sla, budget = build_problem(scenario)
+    problem, sla, budget = build_problem(scenario, mesh=mesh)
     fid = scenario.fidelity
     if scenario.search is not None:
         t2 = time.perf_counter()
@@ -449,6 +461,7 @@ def run_campaign(
     name: str = "campaign",
     verbose: bool = False,
     resume: bool = False,
+    mesh=None,
 ) -> CampaignReport:
     """Run many scenarios with shared trace analysis and batched stage 2.
 
@@ -463,6 +476,13 @@ def run_campaign(
     still cost one jitted call per group per generation.  ``resume``
     continues each scenario's checkpointed search from
     ``search.checkpoint_dir/<scenario name>``.
+
+    ``mesh`` (a ``MeshSpec`` / device count, winning over each scenario's
+    own ``mesh``) shards every group's batched stage-2/stage-4 call over the
+    device mesh.  A ``scenario_axis > 1`` spreads the candidate axis over a
+    second, data-parallel mesh dimension as well, so a group's concatenated
+    per-scenario candidate blocks land on different device groups — results
+    stay bit-identical to the serial path either way.
     """
     scns = [registry[s] if isinstance(s, str) else s for s in scenarios]
     if not scns:
@@ -481,10 +501,11 @@ def run_campaign(
                 tr = s.trace.build()
                 trace_cache[tkey] = (tr, analyze(tr))
             tr, feats = trace_cache[tkey]
-            problem, _, budget = build_problem(s, trace=tr, features=feats)
+            problem, _, budget = build_problem(s, trace=tr, features=feats,
+                                               mesh=mesh)
             ctxs.append(_Ctx(s, problem, budget, shared, _switch_group_key(s)))
         else:
-            problem, _, budget = build_problem(s)
+            problem, _, budget = build_problem(s, mesh=mesh)
             ctxs.append(_Ctx(s, problem, budget, False, None))
 
     # ---- search engines: one driver per searching scenario

@@ -37,6 +37,7 @@ from repro.core.dsl import (CODESIGN_ADDR_CHOICES, CODESIGN_LENGTH_CHOICES,
                             compressed_protocol, compressed_protocol_space,
                             ethernet_ipv4_udp)
 from repro.core.search import SearchSpec
+from repro.launch.mesh import MeshSpec
 
 __all__ = [
     "ProtocolSpec",
@@ -44,6 +45,7 @@ __all__ = [
     "CommModelSpec",
     "Fidelity",
     "FieldSpec",
+    "MeshSpec",
     "Scenario",
     "SearchSpec",
     "PROTOCOL_BUILDERS",
@@ -433,9 +435,15 @@ class Scenario:
     #: become genes next to the architecture genes (switch domain + search
     #: only; ``override(co_design=True)`` widens a point spec automatically)
     co_design: bool = False
+    #: optional MeshSpec sharding the batched DSE stages across devices;
+    #: None (the default, and what every golden snapshot records) is the
+    #: serial path — results are mesh-invariant either way
+    mesh: Optional[MeshSpec] = None
     notes: str = ""
 
     def __post_init__(self):
+        if self.mesh is not None and not isinstance(self.mesh, MeshSpec):
+            object.__setattr__(self, "mesh", MeshSpec.coerce(self.mesh))
         if self.domain not in ("switch", "comm"):
             raise ValueError(f"unknown domain {self.domain!r}")
         if self.domain == "switch" and self.arch is None:
@@ -484,6 +492,8 @@ class Scenario:
             d["search"] = self.search.to_dict()
         if self.co_design:
             d["co_design"] = True
+        if self.mesh is not None:
+            d["mesh"] = self.mesh.to_dict()
         if self.notes:
             d["notes"] = self.notes
         return d
@@ -510,6 +520,8 @@ class Scenario:
             fidelity=Fidelity.from_dict(d.get("fidelity", {})),
             search=SearchSpec.from_dict(search) if search is not None else None,
             co_design=bool(d.get("co_design", False)),
+            mesh=(MeshSpec.from_dict(d["mesh"])
+                  if d.get("mesh") is not None else None),
             notes=d.get("notes", ""),
         )
 
@@ -545,6 +557,8 @@ class Scenario:
         verify_engine: Optional[str] = None,
         flit_bits: Optional[int] = None,
         co_design: Optional[bool] = None,
+        devices: Optional[int] = None,
+        scenario_devices: Optional[int] = None,
         name: Optional[str] = None,
     ) -> "Scenario":
         """Return a copy with the given knobs replaced (CLI flag surface).
@@ -595,10 +609,19 @@ class Scenario:
                 "ranged protocol spec (the original point widths are not "
                 "recorded); pin each width to a single value or rebuild "
                 "the scenario from the registry")
+        mesh = self.mesh
+        if devices is not None or scenario_devices is not None:
+            base = mesh if mesh is not None else MeshSpec()
+            mesh = MeshSpec(
+                devices=base.devices if devices is None else devices,
+                scenario_axis=(base.scenario_axis if scenario_devices is None
+                               else scenario_devices))
+            if mesh.is_single():
+                mesh = None     # serial default serializes as no mesh at all
         return dataclasses.replace(
             self, sla=sla, trace=trace, budget=budget, fidelity=fid,
             search=self.search if search is _KEEP else search,
             flit_bits=self.flit_bits if flit_bits is None else flit_bits,
-            co_design=cd, protocol=protocol,
+            co_design=cd, protocol=protocol, mesh=mesh,
             name=self.name if name is None else name,
         )

@@ -72,11 +72,21 @@ def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None) -> str
     return path
 
 
+def _step_of(entry: str) -> Optional[int]:
+    """``step_<N>`` -> N; None for tmp dirs and stray non-step entries
+    (editor droppings, ``step_backup`` copies, ...) instead of ValueError."""
+    if not entry.startswith("step_") or entry.endswith(".tmp"):
+        return None
+    try:
+        return int(entry.split("_", 1)[1])
+    except ValueError:
+        return None
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+    steps = [s for s in map(_step_of, os.listdir(ckpt_dir)) if s is not None]
     return max(steps) if steps else None
 
 
@@ -121,9 +131,8 @@ class AsyncCheckpointer:
         self._gc()
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
-            if d.startswith("step_") and not d.endswith(".tmp"))
+        steps = sorted(s for s in map(_step_of, os.listdir(self.ckpt_dir))
+                       if s is not None)
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
                           ignore_errors=True)

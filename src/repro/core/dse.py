@@ -108,6 +108,11 @@ class VerifyResult:
 class DSEProblem:
     """Interface Algorithm 1 runs against (override all methods)."""
 
+    #: optional ``repro.launch.mesh.MeshSpec`` — problems whose batched
+    #: stages can shard the candidate axis read it; results must be
+    #: bit-identical to the serial default (None)
+    mesh_spec = None
+
     def candidates(self) -> List[Any]:
         raise NotImplementedError
 
@@ -408,6 +413,7 @@ def run_dse(
     search: Optional["SearchSpec"] = None,
     checkpoint_dir: Optional[str] = None,
     resume: bool = False,
+    mesh=None,
 ) -> DSEResult:
     """Algorithm 1: Progressive Constraint Satisfaction.
 
@@ -422,7 +428,15 @@ def run_dse(
     verification semantics are identical either way.  ``checkpoint_dir`` /
     ``resume`` control search-state persistence (``checkpoint_dir`` defaults
     to ``search.checkpoint_dir``).
+
+    ``mesh`` is an optional ``repro.launch.mesh.MeshSpec`` (or device count)
+    set on ``problem.mesh_spec``: batched stages shard their candidate axis
+    across the device mesh, bit-identical to the serial default.  The mesh
+    never enters search state — checkpoints written on N devices resume on M.
     """
+    if mesh is not None:
+        from repro.launch.mesh import MeshSpec
+        problem.mesh_spec = MeshSpec.coerce(mesh)
     if search is not None:
         from .search import run_search
         outcome = run_search(problem, search, sla, delta=delta,

@@ -60,6 +60,7 @@ __all__ = [
     "crowding_distance",
     "save_search_state",
     "load_search_state",
+    "remesh_search_state",
 ]
 
 Genome = Tuple[int, ...]
@@ -494,16 +495,27 @@ class NSGA2Search:
 # checkpoint plumbing (repro.checkpoint.store)
 # --------------------------------------------------------------------------
 
-def save_search_state(ckpt_dir: str, engine: NSGA2Search) -> str:
-    """Persist one generation of search state (``step_<generation>``)."""
+def save_search_state(ckpt_dir: str, engine: NSGA2Search, mesh=None) -> str:
+    """Persist one generation of search state (``step_<generation>``).
+
+    ``mesh`` (an optional ``launch.mesh.MeshSpec``) is stamped into the
+    manifest purely as provenance: the state arrays are host-resident and
+    mesh-agnostic, so a checkpoint written on N devices restores on M —
+    restore never reads the stamp (see :func:`remesh_search_state`)."""
     from repro.checkpoint import store      # lazy: store imports jax
     tree, extra = engine.state()
+    if mesh is not None:
+        extra = dict(extra, mesh=mesh.to_dict())
     return store.save(ckpt_dir, engine.generation, tree, extra=extra)
 
 
 def load_search_state(ckpt_dir: str, space: DesignSpace,
                       spec: SearchSpec) -> Optional[NSGA2Search]:
-    """Latest checkpointed engine under ``ckpt_dir``, or None if empty."""
+    """Latest checkpointed engine under ``ckpt_dir``, or None if empty.
+
+    Deliberately ignores any ``mesh`` stamp in the manifest: search state is
+    mesh-shape-independent, so resuming on a different device count is the
+    normal path, not an error."""
     from repro.checkpoint import store
     step = store.latest_step(ckpt_dir)
     if step is None:
@@ -511,6 +523,24 @@ def load_search_state(ckpt_dir: str, space: DesignSpace,
     template = {k: np.zeros((0,), np.int64) for k in NSGA2Search._STATE_KEYS}
     tree, manifest = store.restore(ckpt_dir, step, template=template)
     return NSGA2Search.from_state(space, spec, tree, manifest["extra"])
+
+
+def remesh_search_state(tree: Mapping[str, np.ndarray],
+                        extra: Mapping[str, Any], mesh=None):
+    """The ``runtime.elastic.remesh`` analogue for search state.
+
+    Search state lives on the host (pure NumPy) and contains nothing shaped
+    by the mesh — population, eval cache, RNG stream and hv history are all
+    device-count-independent — so remeshing is the identity on the arrays
+    and only restamps the provenance ``mesh`` entry.  ``remesh(state, N→M→N)
+    == state`` by construction; ``tests/test_mesh_properties.py`` holds the
+    codebase to it."""
+    from repro.launch.mesh import MeshSpec
+    mesh = MeshSpec.coerce(mesh)
+    extra = {k: v for k, v in extra.items() if k != "mesh"}
+    if mesh is not None:
+        extra["mesh"] = mesh.to_dict()
+    return dict(tree), extra
 
 
 # --------------------------------------------------------------------------
@@ -630,7 +660,8 @@ class SearchDriver:
         self._pending_genomes, self._pending_cands = [], []
         self.engine.tell(tell)
         if self.checkpoint_dir:
-            save_search_state(self.checkpoint_dir, self.engine)
+            save_search_state(self.checkpoint_dir, self.engine,
+                              mesh=getattr(self.problem, "mesh_spec", None))
 
     # ------------------------------------------------------------ finalize
     def finalize(self) -> "SearchOutcome":

@@ -22,8 +22,30 @@ def shardings_for(mesh, specs):
         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 
 
+def _validate_remesh_target(new_mesh) -> None:
+    """Refuse meshes that would produce silently-wrong shardings.
+
+    Two historical failure modes: a target mesh claiming more devices than
+    the runtime actually has (device_put then scatters onto a stale device
+    list) and a zero-extent axis (every sharding along it is degenerate).
+    Both now raise with the numbers named instead."""
+    for name, extent in zip(new_mesh.axis_names, new_mesh.devices.shape):
+        if extent < 1:
+            raise ValueError(
+                f"remesh target axis {name!r} has extent {extent}; every "
+                f"mesh axis needs extent >= 1 "
+                f"(shape={tuple(new_mesh.devices.shape)})")
+    needed = int(new_mesh.devices.size)
+    available = jax.device_count()
+    if needed > available:
+        raise ValueError(
+            f"remesh target mesh needs {needed} devices but only "
+            f"{available} are available")
+
+
 def remesh(state: Any, specs: Any, new_mesh) -> Any:
     """Move a (host or device) state pytree onto a new mesh."""
+    _validate_remesh_target(new_mesh)
     shardings = shardings_for(new_mesh, specs)
     return jax.tree.map(
         lambda leaf, sh: jax.device_put(jax.device_get(leaf), sh), state, shardings)

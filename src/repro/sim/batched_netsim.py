@@ -68,16 +68,18 @@ from .netsim import NetSimConfig, run_netsim, service_times, switch_arrival_time
 __all__ = ["run_netsim_batched"]
 
 
-@functools.partial(jax.jit, static_argnames=("n_ports", "d_max"))
-def _verify_engine(now, src, dst, svc, pipe, depth, mod, *, n_ports, d_max):
-    """One jitted call: the finite-VOQ admission scan for a whole batch.
+def _verify_engine_impl(now, src, dst, svc, pipe, depth, mod, *, n_ports,
+                        d_max):
+    """One call: the finite-VOQ admission scan for a whole batch.
 
     Carries ``in_free``/``out_free`` [B, N] port availability, the [B, N², D]
     departure-time ring and the [B, N²] admission counters.  ``mod`` is the
     per-candidate ring modulus (``min(depth, m)`` — a queue can never hold
     more than the whole trace), so one static ``d_max`` serves mixed-depth
     batches.  Returns per-event departure times and admission flags; drop
-    counts and latencies reduce on the host."""
+    counts and latencies reduce on the host.  All carries are per-candidate
+    (the timeline is replicated), so sharding the candidate axis with
+    ``shard_map`` reproduces the monolithic scan bit-for-bit."""
     b_n = svc.shape[1]
     q_n = n_ports * n_ports
     brange = jnp.arange(b_n)
@@ -109,6 +111,34 @@ def _verify_engine(now, src, dst, svc, pipe, depth, mod, *, n_ports, d_max):
     return end.T, admit.T                                  # [B, m] each
 
 
+_verify_engine = jax.jit(_verify_engine_impl,
+                         static_argnames=("n_ports", "d_max"))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_verify_engine(mesh, n_ports, d_max):
+    """The same admission scan, candidate axis sharded over the mesh.
+
+    ``svc`` arrives [m, B] (scan xs layout) so its candidate axis is axis 1;
+    ``pipe``/``depth``/``mod`` split along axis 0; the event timeline
+    (``now``/``src``/``dst``) is replicated.  Rowwise-independent carries —
+    no collectives — so each shard is bitwise the serial recurrence on its
+    slice."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    names = tuple(mesh.axis_names)
+    cand = P(names)
+    rep = P()
+    body = functools.partial(_verify_engine_impl, n_ports=n_ports,
+                             d_max=d_max)
+    return jax.jit(compat.shard_map(
+        body, mesh,
+        in_specs=(rep, rep, rep, P(None, names), cand, cand, cand),
+        out_specs=(cand, cand)))
+
+
 def _shared_cap_ok(end_b: np.ndarray, admit_b: np.ndarray, now: np.ndarray,
                    cap: int) -> bool:
     """True iff the shared-buffer cap never binds in the unconstrained run.
@@ -132,7 +162,8 @@ def _empty_result(hw: HardwareParams) -> VerifyResult:
               "hw": hw, "engine": "batched_netsim"})
 
 
-def _run_group(archs, bounds, trace, hw_list, cfg) -> List[VerifyResult]:
+def _run_group(archs, bounds, trace, hw_list, cfg,
+               mesh_spec=None) -> List[VerifyResult]:
     """All candidates share n_ports *and* header wire-bytes; every other
     parameter is a batch axis.  The header width is structural here — unlike
     stage 2, the event timeline (host-NIC serialisation) depends on wire
@@ -164,16 +195,31 @@ def _run_group(archs, bounds, trace, hw_list, cfg) -> List[VerifyResult]:
     # static ring size rounds up to a power of two so sweeps with nearby sized
     # depths reuse one compiled scan
     mod = np.minimum(np.maximum(depth, 1), m).astype(np.int32)
+    # d_max comes from the *unpadded* depths (pad rows replicate row 0), so
+    # the compiled ring size — and the scan it keys — is mesh-invariant
     d_max = 1 << int(int(mod.max()) - 1).bit_length()
 
-    with enable_x64():
-        end, admit = _verify_engine(
-            jnp.asarray(now), jnp.asarray(src[order], jnp.int32),
-            jnp.asarray(dst[order], jnp.int32), jnp.asarray(svc[:, order].T),
-            jnp.asarray(pipe), jnp.asarray(depth, jnp.int32),
-            jnp.asarray(mod), n_ports=n, d_max=d_max)
-    end = np.asarray(end, np.float64)
-    admit = np.asarray(admit, bool)
+    k = 1 if mesh_spec is None else mesh_spec.shard_axis
+    if k > 1:
+        from repro.launch.mesh import shard_pad
+        svc_p = shard_pad(svc, k)
+        with enable_x64():
+            end, admit = _sharded_verify_engine(mesh_spec.build(), n, d_max)(
+                jnp.asarray(now), jnp.asarray(src[order], jnp.int32),
+                jnp.asarray(dst[order], jnp.int32),
+                jnp.asarray(svc_p[:, order].T),
+                jnp.asarray(shard_pad(pipe, k)),
+                jnp.asarray(shard_pad(depth, k), jnp.int32),
+                jnp.asarray(shard_pad(mod, k)))
+    else:
+        with enable_x64():
+            end, admit = _verify_engine(
+                jnp.asarray(now), jnp.asarray(src[order], jnp.int32),
+                jnp.asarray(dst[order], jnp.int32), jnp.asarray(svc[:, order].T),
+                jnp.asarray(pipe), jnp.asarray(depth, jnp.int32),
+                jnp.asarray(mod), n_ports=n, d_max=d_max)
+    end = np.asarray(end, np.float64)[:b_n]     # strip pad rows (no-op serial)
+    admit = np.asarray(admit, bool)[:b_n]
 
     t0_min = float(t0.min())
     wire_e = wire[order]
@@ -225,8 +271,14 @@ def run_netsim_batched(
     cfg: Optional[NetSimConfig] = None,
     back_annotation: bool = True,
     i_burst: float = 1.0,
+    mesh=None,
 ) -> List[VerifyResult]:
     """Verify a whole sized-candidate batch against one shared trace.
+
+    ``mesh`` is an optional ``repro.launch.mesh.MeshSpec``: more than one
+    shard pads the candidate axis to the mesh extent and runs the admission
+    scan under ``shard_map``, bit-identical to the serial default
+    (``mesh=None``, byte-identical path).
 
     Results are index-aligned with ``archs`` and, candidate by candidate,
     bit-identical to ``run_netsim`` (same drop counts, same delivered set,
@@ -243,6 +295,10 @@ def run_netsim_batched(
     """
     if cfg is None:
         cfg = NetSimConfig()
+    from repro.launch.mesh import MeshSpec
+    mesh = MeshSpec.coerce(mesh)
+    if mesh is not None and mesh.is_single():
+        mesh = None
     archs = list(archs)
     bounds = (list(bound) if isinstance(bound, (list, tuple))
               else [bound] * len(archs))
@@ -268,11 +324,11 @@ def run_netsim_batched(
     for i, a in enumerate(archs):
         groups.setdefault((a.n_ports, bounds[i].header_bytes), []).append(i)
     if len(groups) == 1:
-        return _run_group(archs, bounds, trace, hw, cfg)
+        return _run_group(archs, bounds, trace, hw, cfg, mesh_spec=mesh)
     out: List[Optional[VerifyResult]] = [None] * len(archs)
     for idx in groups.values():
         part = _run_group([archs[i] for i in idx], [bounds[i] for i in idx],
-                          trace, [hw[i] for i in idx], cfg)
+                          trace, [hw[i] for i in idx], cfg, mesh_spec=mesh)
         for i, v in zip(idx, part):
             out[i] = v
     return out

@@ -49,14 +49,17 @@ __all__ = ["BatchedSurrogateResult", "run_surrogate_batched", "DEFAULT_QUANTILES
 DEFAULT_QUANTILES = (50.0, 90.0, 99.0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_ports", "use_pallas", "interpret"))
-def _engine(dt, src, dst, svc, t, wire_bits, *, n_ports, use_pallas, interpret):
-    """One jitted call: contention scan + throughput.
+def _engine_impl(dt, src, dst, svc, t, wire_bits, *, n_ports, use_pallas,
+                 interpret):
+    """One call: contention scan + throughput.
 
     Latency (one broadcast over dep) and quantile reduction deliberately
     stay on the host: returning the [B, m] latency matrix would double the
     largest device-to-host transfer, and XLA's CPU sort is ~10x slower than
-    numpy's (measured)."""
+    numpy's (measured).  The scan is rowwise over the candidate axis (per-
+    candidate carries, replicated timeline), so any partition of the batch —
+    including a shard_map split across devices — is bitwise-identical to the
+    monolithic call."""
     dep = xbar_contend(t, dt, src, dst, svc, n_ports=n_ports,
                        use_pallas=use_pallas, interpret=interpret)
     # dep is absolute on the f64 path, an arrival-relative offset on f32
@@ -65,6 +68,32 @@ def _engine(dt, src, dst, svc, t, wire_bits, *, n_ports, use_pallas, interpret):
     duration = jnp.maximum(jnp.max(dep_end, axis=1), 1e-12)
     thru = wire_bits / duration / 1e9                           # [B] Gbps
     return dep, thru
+
+
+_engine = jax.jit(_engine_impl,
+                  static_argnames=("n_ports", "use_pallas", "interpret"))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_engine(mesh, n_ports, use_pallas, interpret):
+    """The same scan, candidate axis sharded over every mesh axis.
+
+    ``svc`` [B, m] and ``wire_bits`` [B] split along B; the timeline
+    (``dt``/``src``/``dst``/``t``) is replicated.  No collectives: rows are
+    independent, so each shard runs the serial recurrence on its slice and
+    the result is bitwise-identical to the single-device call."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    cand = P(tuple(mesh.axis_names))
+    rep = P()
+    body = functools.partial(_engine_impl, n_ports=n_ports,
+                             use_pallas=use_pallas, interpret=interpret)
+    return jax.jit(compat.shard_map(
+        body, mesh,
+        in_specs=(rep, rep, rep, cand, rep, cand),
+        out_specs=(cand, cand)))
 
 
 def _exact_occupancy(t, qid, dep):
@@ -159,7 +188,7 @@ class BatchedSurrogateResult:
 
 
 def _run_group(archs, bounds, trace, hw_list, use_pallas, interpret, precision,
-               quantiles):
+               quantiles, mesh_spec=None):
     """All candidates share n_ports; every other parameter — including the
     protocol's header wire-bytes under co-design — is a batch axis.  The
     shared arrival timeline is the trace's (candidate-independent), so mixed
@@ -203,17 +232,33 @@ def _run_group(archs, bounds, trace, hw_list, use_pallas, interpret, precision,
         thru = np.zeros(b_n)
     else:
         dt = np.diff(t, prepend=t[:1])
-        args = (dt.astype(dtype), src.astype(np.int32), dst.astype(np.int32),
-                svc.astype(dtype), t.astype(dtype),
-                wire_bits.astype(dtype))
-        kw = dict(n_ports=n, use_pallas=use_pallas, interpret=interpret)
+        k = 1 if mesh_spec is None else mesh_spec.shard_axis
+        if k > 1:
+            # pad the candidate axis to the mesh extent (throwaway replicas
+            # of row 0, stripped below) and shard it over every mesh axis
+            from repro.launch.mesh import shard_pad
+            args = (dt.astype(dtype), src.astype(np.int32),
+                    dst.astype(np.int32),
+                    shard_pad(svc.astype(dtype), k),
+                    t.astype(dtype),
+                    shard_pad(wire_bits.astype(dtype), k))
+            engine = _sharded_engine(mesh_spec.build(), n, use_pallas,
+                                     interpret)
+        else:
+            args = (dt.astype(dtype), src.astype(np.int32),
+                    dst.astype(np.int32), svc.astype(dtype), t.astype(dtype),
+                    wire_bits.astype(dtype))
+            engine = functools.partial(_engine, n_ports=n,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret)
         if precision == "float64":
             with enable_x64():
-                dep, thru = _engine(*args, **kw)
+                dep, thru = engine(*args)
                 dep, thru = np.asarray(dep), np.asarray(thru)
         else:
-            dep, thru = _engine(*args, **kw)
+            dep, thru = engine(*args)
             dep, thru = np.asarray(dep, np.float64), np.asarray(thru, np.float64)
+        dep, thru = dep[:b_n], thru[:b_n]       # strip pad rows (no-op serial)
     if precision == "float64":
         # the f64 scan returns absolute departure times so the occupancy
         # comparisons below see the serial path's exact values (no offset
@@ -250,8 +295,15 @@ def run_surrogate_batched(
     interpret: bool = True,
     precision: str = "float64",
     quantiles: Sequence[float] = DEFAULT_QUANTILES,
+    mesh=None,
 ) -> BatchedSurrogateResult:
     """Evaluate a whole candidate batch against one shared trace.
+
+    ``mesh`` is an optional ``repro.launch.mesh.MeshSpec`` (or anything its
+    ``coerce`` accepts): when it names more than one shard the candidate
+    axis is padded to the mesh extent and the scan runs under ``shard_map``
+    across the device mesh — bit-identical to the serial path, which remains
+    the byte-identical default (``mesh=None``).
 
     ``bound`` is one ``BoundProtocol`` shared by the batch, or — for the
     protocol/architecture co-design DSE — a per-candidate sequence (index-
@@ -277,6 +329,10 @@ def run_surrogate_batched(
         # that in the dtype, the meta, and the skipped enable_x64 — a silent
         # downcast would betray the documented bit-exactness of the f64 path
         precision = "float32"
+    from repro.launch.mesh import MeshSpec
+    mesh = MeshSpec.coerce(mesh)
+    if mesh is not None and mesh.is_single():
+        mesh = None
     archs = list(archs)
     bounds = (list(bound) if isinstance(bound, (list, tuple))
               else [bound] * len(archs))
@@ -304,11 +360,11 @@ def run_surrogate_batched(
         groups.setdefault(a.n_ports, []).append(i)
     if len(groups) == 1:
         return _run_group(archs, bounds, trace, hw, use_pallas, interpret,
-                          precision, quantiles)
+                          precision, quantiles, mesh_spec=mesh)
 
     parts = {n: _run_group([archs[i] for i in idx], [bounds[i] for i in idx],
                            trace, [hw[i] for i in idx], use_pallas, interpret,
-                           precision, quantiles)
+                           precision, quantiles, mesh_spec=mesh)
              for n, idx in groups.items()}
     # stitch [B, m] arrays back in input order (m is shared: one trace)
     first = next(iter(parts.values()))

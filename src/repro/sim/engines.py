@@ -169,10 +169,10 @@ def _surrogate_evaluate(arch, bound, trace, *, hw=None, back_annotation=False,
 
 
 def _batched_surrogate_batch(archs, bound, trace, *, hw=None,
-                             back_annotation=False, i_burst=1.0):
+                             back_annotation=False, i_burst=1.0, mesh=None):
     res = run_surrogate_batched(list(archs), bound, trace, hw=hw,
                                 back_annotation=back_annotation,
-                                i_burst=i_burst)
+                                i_burst=i_burst, mesh=mesh)
     return [_surrogate_to_verify(sr) for sr in res.results()]
 
 
@@ -194,9 +194,11 @@ def _netsim_evaluate(arch, bound, trace, *, hw=None, back_annotation=False,
 
 
 def _batched_netsim_batch(archs, bound, trace, *, hw=None,
-                          back_annotation=False, i_burst=1.0, cfg=None):
+                          back_annotation=False, i_burst=1.0, cfg=None,
+                          mesh=None):
     return run_netsim_batched(list(archs), bound, trace, hw=hw, cfg=cfg,
-                              back_annotation=back_annotation, i_burst=i_burst)
+                              back_annotation=back_annotation,
+                              i_burst=i_burst, mesh=mesh)
 
 
 def _batched_netsim_evaluate(arch, bound, trace, *, hw=None,

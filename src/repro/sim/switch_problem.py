@@ -128,12 +128,17 @@ class SwitchDSEProblem(DSEProblem):
         binding: Optional[SemanticBinding] = None,
         flit_bits: Optional[int] = None,
         require_seq: bool = False,
+        mesh=None,
     ):
         if verify_engine not in VERIFY_ENGINES:
             raise ValueError(f"unknown verify_engine {verify_engine!r}; "
                              f"known: {VERIFY_ENGINES}")
         self.request = request
         self.trace = trace
+        # optional launch.mesh.MeshSpec: shards the stage-2/stage-4 batched
+        # scans across the device mesh (bit-identical to the serial default)
+        from repro.launch.mesh import MeshSpec
+        self.mesh_spec = MeshSpec.coerce(mesh)
         self.protocol_space = protocol_space
         self.binding = binding if binding is not None else SemanticBinding()
         self.require_seq = require_seq
@@ -332,7 +337,8 @@ class SwitchDSEProblem(DSEProblem):
             [self._arch(c) for c in cands], self._batch_bound(cands),
             self.trace,
             back_annotation=self.back_annotation,
-            i_burst=self.features.i_burst).results()
+            i_burst=self.features.i_burst,
+            mesh=self.mesh_spec).results()
 
     # ------------------------------------------------------------- stage 3
     def size_buffers(self, c, q_occupancy: np.ndarray, eps: float):
@@ -373,7 +379,8 @@ class SwitchDSEProblem(DSEProblem):
             [self._arch(c) for c in cands], self._batch_bound(cands),
             self.trace,
             back_annotation=self.back_annotation,
-            i_burst=self.features.i_burst)
+            i_burst=self.features.i_burst,
+            mesh=self.mesh_spec)
 
     def escalate(self, c, v: VerifyResult) -> Optional[VerifyResult]:
         """``verify_engine="auto"``: the front was verified by batched netsim;

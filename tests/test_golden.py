@@ -20,6 +20,8 @@ Regenerate after an *intentional* behaviour change with:
 import json
 import math
 import os
+import subprocess
+import sys
 
 import pytest
 
@@ -149,6 +151,45 @@ def test_golden_report(name, request):
     assert not errors, (
         f"{name}: report drifted from {path} "
         f"({len(errors)} mismatch(es)):\n" + "\n".join(errors))
+
+
+# --------------------------------------------------------------------------
+# mesh invariance: the same snapshot must hold on a sharded device mesh
+# --------------------------------------------------------------------------
+
+def test_golden_hft_nsga2_mesh_invariant():
+    """Re-run ``hft_nsga2`` under 2 simulated host devices and diff against
+    the *single-device* golden snapshot.  The goldens are mesh-invariant by
+    contract — sharding the batched stages may never shift a front, a drop
+    count, or a latency quantile — so no regeneration is allowed here: a
+    mismatch is a sharding bug, not snapshot drift."""
+    path = os.path.join(GOLDEN_DIR, "hft_nsga2.json")
+    if not os.path.exists(path):
+        pytest.fail(f"no golden report at {path}; generate with "
+                    "`pytest tests/test_golden.py --update-golden` "
+                    "(on a single device)")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run([sys.executable, "-c", """
+import json
+from repro.api import registry, run_scenario
+from repro.api.scenario import MeshSpec, SearchSpec
+scenario = registry["hft"].override(
+    back_annotation=False,
+    search=SearchSpec(population=16, generations=4, seed=7))
+report = run_scenario(scenario, mesh=MeshSpec(devices=2))
+print(json.dumps(report.to_dict()))
+"""], env=env, cwd=repo, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    with open(path) as f:
+        want = json.load(f)
+    errors = diff_reports(got, want)
+    assert not errors, (
+        "hft_nsga2 under a 2-device mesh drifted from the single-device "
+        f"golden ({len(errors)} mismatch(es)):\n" + "\n".join(errors))
 
 
 # --------------------------------------------------------------------------
