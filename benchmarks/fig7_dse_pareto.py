@@ -37,7 +37,7 @@ def run():
     # brute force over BRAM-aligned depths (sub-row depths cost a full row)
     points = []
     for a in enumerate_candidates(scenario.arch):
-        for d in {align_depth_to_bram(d, a.bus_bits) for d in (1, 64, 256, 1024)}:
+        for d in sorted({align_depth_to_bram(d, a.bus_bits) for d in (1, 64, 256, 1024)}):
             cand = a.with_depth(d)
             v = run_netsim(cand, bound, tr, back_annotation=False)
             r = synthesize(cand, bound)

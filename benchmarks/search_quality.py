@@ -82,8 +82,8 @@ def run():
         "nsga2_genome_evaluations": int(out.evaluations),
         "nsga2_surrogate_rows": int(out.surrogate_rows),
         "evaluation_fraction": float(eval_frac),
-        "exhaustive_wall_s": float(t_ex),
-        "nsga2_wall_s": float(t_search),
+        "exhaustive_wall_time_s": float(t_ex),
+        "nsga2_wall_time_s": float(t_search),
         "seed_reproducible": bool(reproducible),
         "pass": bool(ok),
     }

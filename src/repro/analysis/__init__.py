@@ -1,0 +1,42 @@
+"""Static analysis for SPAC: spec diagnostics, lint rules, retrace guard.
+
+Three coordinated pieces:
+
+* ``repro.analysis.check`` — ``spac check``: spec-level ``SPAC1xx``
+  diagnostics (addressability, SLA satisfiability, budget vs the minimal
+  resource plan, dead co-design genes, feasible-fraction estimates) with
+  no trace build and no jit trace.
+* ``repro.analysis.lint`` — ``spaclint`` / ``spac lint``: AST ``SPAC2xx``
+  rules for the determinism and jit-hygiene contracts.
+* ``repro.analysis.retrace`` — compile-count guard asserting the
+  lru-cached sharded engines compile exactly once per (shape, mesh).
+
+This ``__init__`` stays light on purpose: the sim engine modules import
+``retrace`` at load time while ``check`` imports ``repro.api`` (which
+imports the sim engines) — so ``check``/``lint`` resolve lazily to keep
+the graph acyclic.
+"""
+
+from .diagnostics import (Diagnostic, SEVERITIES, EXIT_CLEAN, EXIT_FINDINGS,
+                          EXIT_USAGE, worst_severity, exit_code, format_text,
+                          to_json_payload)
+from .retrace import (track, tracked_names, compile_counts, RetraceError,
+                      RetraceGuard, retrace_guard)
+
+__all__ = [
+    "Diagnostic", "SEVERITIES", "EXIT_CLEAN", "EXIT_FINDINGS", "EXIT_USAGE",
+    "worst_severity", "exit_code", "format_text", "to_json_payload",
+    "track", "tracked_names", "compile_counts", "RetraceError",
+    "RetraceGuard", "retrace_guard",
+    "check_scenario", "lint_source", "lint_paths",
+]
+
+
+def __getattr__(name):
+    if name == "check_scenario":
+        from .check import check_scenario
+        return check_scenario
+    if name in ("lint_source", "lint_paths"):
+        from . import lint
+        return getattr(lint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

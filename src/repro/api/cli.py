@@ -2,6 +2,9 @@
 
     spac list                                  # registry scenarios
     spac show hft                              # dump a scenario as JSON
+    spac check hft                             # static diagnostics (SPAC1xx)
+    spac check my_scenario.json --format json
+    spac lint src tests benchmarks             # determinism lint (SPAC2xx)
     spac run hft --sla-p99-ns 5000             # one scenario, with overrides
     spac run my_scenario.json --out report.json
     spac run hft --search nsga2 --generations 10 --search-seed 0
@@ -94,7 +97,13 @@ def _load_scenario(target: str):
     if target in registry:
         return registry[target]
     if target.endswith(".json"):
-        return Scenario.load(target)
+        try:
+            return Scenario.load(target)
+        except (OSError, json.JSONDecodeError) as e:
+            raise SystemExit(
+                f"cannot load scenario file {target!r}: {e}") from e
+        except (KeyError, TypeError, ValueError) as e:
+            raise SystemExit(f"bad scenario spec in {target!r}: {e}") from e
     raise SystemExit(
         f"unknown scenario {target!r} (not in registry, not a .json path); "
         f"known: {', '.join(registry.names())}")
@@ -271,6 +280,27 @@ def build_parser() -> argparse.ArgumentParser:
     sp = sub.add_parser("show", help="dump a scenario spec as JSON")
     sp.add_argument("scenario", help="registry name or .json path")
 
+    cp = sub.add_parser(
+        "check",
+        help="static spec diagnostics (SPAC1xx): addressability, SLA "
+             "satisfiability, budget vs the minimal plan, dead co-design "
+             "genes — no trace, no jit; exits 0 clean / 1 findings / 2 usage")
+    cp.add_argument("scenarios", nargs="+",
+                    help="registry names or .json paths")
+    cp.add_argument("--format", choices=("text", "json"), default="text")
+
+    tp = sub.add_parser(
+        "lint",
+        help="determinism/jit-hygiene lint (SPAC2xx) — same engine as the "
+             "spaclint entry point")
+    tp.add_argument("paths", nargs="*",
+                    help="files or directories to lint (default: .)")
+    tp.add_argument("--format", choices=("text", "json"), default="text")
+    tp.add_argument("--select", default=None, metavar="CODES",
+                    help="comma-separated rule codes to run")
+    tp.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+
     rp = sub.add_parser("run", help="run one scenario")
     rp.add_argument("scenario", help="registry name or .json path")
     _add_override_flags(rp)
@@ -335,6 +365,41 @@ def _cmd_run(args) -> int:
     return 0 if report.best is not None else 1
 
 
+def _cmd_check(args) -> int:
+    import dataclasses
+    from repro.analysis.check import check_scenario
+    from repro.analysis.diagnostics import (EXIT_USAGE, exit_code,
+                                            format_text, to_json_payload)
+    diags = []
+    for target in args.scenarios:
+        try:
+            scenario = _load_scenario(target)
+        except SystemExit as e:
+            # input that never became checkable is a usage error (2), kept
+            # distinct from findings (1) so CI can tell the two apart
+            print(f"spac check: {e}", file=sys.stderr)
+            return EXIT_USAGE
+        diags.extend(dataclasses.replace(d, location=f"{target}:{d.location}")
+                     for d in check_scenario(scenario))
+    if args.format == "json":
+        print(json.dumps(to_json_payload(diags), indent=2, sort_keys=True))
+    else:
+        print(format_text(diags, clean_message=(
+            f"spac check: {len(args.scenarios)} scenario(s) clean")))
+    return exit_code(diags)
+
+
+def _cmd_lint(args) -> int:
+    from repro.analysis.lint import main as lint_main
+    argv = []
+    if args.list_rules:
+        argv.append("--list-rules")
+    if args.select:
+        argv += ["--select", args.select]
+    argv += ["--format", args.format]
+    return lint_main(argv + list(args.paths))
+
+
 def _cmd_sweep(args) -> int:
     from .runner import run_campaign
     if args.config:
@@ -359,8 +424,8 @@ def _cmd_sweep(args) -> int:
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     args = build_parser().parse_args(argv)
-    return {"list": _cmd_list, "show": _cmd_show,
-            "run": _cmd_run, "sweep": _cmd_sweep}[args.cmd](args)
+    return {"list": _cmd_list, "show": _cmd_show, "check": _cmd_check,
+            "lint": _cmd_lint, "run": _cmd_run, "sweep": _cmd_sweep}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -85,11 +85,13 @@ class BoundProtocol:
 
 def bind(
     protocol: Protocol,
-    binding: SemanticBinding = SemanticBinding(),
+    binding: Optional[SemanticBinding] = None,
     *,
     flit_bits: int = 256,
 ) -> BoundProtocol:
     """Resolve semantics by explicit override first, then by field alias."""
+    if binding is None:
+        binding = SemanticBinding()
     resolved: Dict[str, str] = {}
     for sem in KNOWN_SEMANTICS:
         override = getattr(binding, sem, None)

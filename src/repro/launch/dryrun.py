@@ -199,8 +199,8 @@ def lower_cell(
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_chips": n_chips,
         "kind": shape.kind,
-        "lower_s": round(t_lower, 1),
-        "compile_s": round(t_compile, 1),
+        "lower_time_s": round(t_lower, 1),
+        "compile_time_s": round(t_compile, 1),
         "memory": mem_rec,
         "bytes_per_device_live": live,
         "fits_16gb": bool(live <= 16e9),

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.analysis.retrace import track
 from repro.core.archspec import SwitchArch, VOQKind
 from repro.core.binding import BoundProtocol
 from repro.core.dse import VerifyResult
@@ -111,8 +112,9 @@ def _verify_engine_impl(now, src, dst, svc, pipe, depth, mod, *, n_ports,
     return end.T, admit.T                                  # [B, m] each
 
 
-_verify_engine = jax.jit(_verify_engine_impl,
-                         static_argnames=("n_ports", "d_max"))
+_verify_engine = track("netsim.engine",
+                       jax.jit(_verify_engine_impl,
+                               static_argnames=("n_ports", "d_max")))
 
 
 @functools.lru_cache(maxsize=None)
@@ -133,10 +135,12 @@ def _sharded_verify_engine(mesh, n_ports, d_max):
     rep = P()
     body = functools.partial(_verify_engine_impl, n_ports=n_ports,
                              d_max=d_max)
-    return jax.jit(compat.shard_map(
+    name = (f"netsim.sharded[{'x'.join(map(str, mesh.devices.shape))} "
+            f"{','.join(names)} n_ports={n_ports} d_max={d_max}]")
+    return track(name, jax.jit(compat.shard_map(
         body, mesh,
         in_specs=(rep, rep, rep, P(None, names), cand, cand, cand),
-        out_specs=(cand, cand)))
+        out_specs=(cand, cand))))
 
 
 def _shared_cap_ok(end_b: np.ndarray, admit_b: np.ndarray, now: np.ndarray,

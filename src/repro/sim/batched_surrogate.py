@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.analysis.retrace import track
 from repro.core.archspec import SwitchArch, VOQKind
 from repro.core.binding import BoundProtocol
 from repro.core.dse import SurrogateResult
@@ -70,8 +71,10 @@ def _engine_impl(dt, src, dst, svc, t, wire_bits, *, n_ports, use_pallas,
     return dep, thru
 
 
-_engine = jax.jit(_engine_impl,
-                  static_argnames=("n_ports", "use_pallas", "interpret"))
+_engine = track("surrogate.engine",
+                jax.jit(_engine_impl,
+                        static_argnames=("n_ports", "use_pallas",
+                                         "interpret")))
 
 
 @functools.lru_cache(maxsize=None)
@@ -90,10 +93,12 @@ def _sharded_engine(mesh, n_ports, use_pallas, interpret):
     rep = P()
     body = functools.partial(_engine_impl, n_ports=n_ports,
                              use_pallas=use_pallas, interpret=interpret)
-    return jax.jit(compat.shard_map(
+    name = (f"surrogate.sharded[{'x'.join(map(str, mesh.devices.shape))} "
+            f"{','.join(mesh.axis_names)} n_ports={n_ports}]")
+    return track(name, jax.jit(compat.shard_map(
         body, mesh,
         in_specs=(rep, rep, rep, cand, rep, cand),
-        out_specs=(cand, cand)))
+        out_specs=(cand, cand))))
 
 
 def _exact_occupancy(t, qid, dep):

@@ -60,9 +60,12 @@ def make_train_step(
     plan: ShardingPlan,
     mesh,
     opt: Optimizer,
-    spec: TrainSpec = TrainSpec(),
+    spec: Optional[TrainSpec] = None,
     param_shardings=None,
 ) -> Callable:
+    if spec is None:
+        spec = TrainSpec()
+
     def loss_for(params, mb):
         return T.loss_fn(params, cfg, plan, mesh, mb, moe_opts=spec.moe_opts)
 

@@ -67,12 +67,13 @@ def test_microbatch_grad_equivalence(setup):
     """mb=1 vs mb=2 must produce (nearly) the same update."""
     mesh, cfg, params, _, data = setup
     batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
-    outs = []
-    for mb in (1, 2):
+    def run_with(mb):
         opt = adamw(lr=1e-3)
         ts = jax.jit(make_train_step(cfg, PLAN, mesh, opt, TrainSpec(microbatches=mb)))
         p, o, m = ts(params, opt.init(params), batch, jnp.asarray(0))
-        outs.append(p)
+        return p
+
+    outs = [run_with(mb) for mb in (1, 2)]
     d = jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32)
                                                 - b.astype(jnp.float32)).max()),
                      outs[0], outs[1])
