@@ -20,8 +20,9 @@ import time
 import traceback
 
 from . import (dse_throughput, fig1_sensitivity, fig6_fidelity, fig7_dse_pareto,
-               fig8_scaling, mesh_scaling, moe_fabric, roofline_table,
-               search_quality, table1_resources, table2_adaptation)
+               fig8_scaling, mesh_scaling, moe_fabric, netsim_kernel,
+               roofline_table, search_quality, table1_resources,
+               table2_adaptation)
 
 SUITES = {
     "table1": table1_resources.run,
@@ -40,6 +41,9 @@ SUITES = {
     # device-mesh sharding: stage-2/stage-4 cand/s over 1/2/4/8 simulated
     # host devices + bitwise/Pareto identity asserts (subprocess, 8 forced)
     "mesh_scaling": mesh_scaling.run,
+    # segmented netsim kernels vs the oracle engines on a 256-candidate
+    # sized hft sweep — >=5x stage-4 bar + bitwise parity, both hard-fail
+    "netsim_kernel": netsim_kernel.run,
 }
 
 DEFAULT_JSON = "BENCH_dse.json"

@@ -87,6 +87,15 @@ RULES: Dict[str, Rule] = {r.code: r for r in (
          "builders; a jit in a loop body retraces every iteration",
          "the stage-2 batched engine exists to amortise one trace over "
          "thousands of candidates — a loop-local jit undoes exactly that"),
+    Rule("SPAC208", "host numpy sort inside a loop body",
+         "event timelines are sorted once per trace (the `sim.timeline` "
+         "memo, PR 8) and batch-wide sorts run once per call; a "
+         "np.sort/argsort/lexsort in a loop body re-pays O(m log m) host "
+         "work per candidate or per generation in the DSE hot path",
+         "batched_netsim's shared-cap audit re-sorted the admitted "
+         "departure times per candidate row — hundreds of redundant sorts "
+         "of the same event batch per verify call, found while building "
+         "the segmented kernel path"),
 )}
 
 _SUPPRESS_RE = re.compile(
@@ -450,9 +459,52 @@ def _check_jit_in_loop(tree: ast.AST) -> List[_Finding]:
     return out
 
 
+_HOST_SORTS = {"sort", "argsort", "lexsort"}
+
+
+def _check_sort_in_loop(tree: ast.AST) -> List[_Finding]:
+    out = []
+
+    def is_host_sort(node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        parts = (_dotted(node.func) or "").split(".")
+        return (len(parts) == 2 and parts[0] in {"np", "numpy"}
+                and parts[1] in _HOST_SORTS)
+
+    def visit(node: ast.AST, in_loop: bool) -> None:
+        if in_loop and is_host_sort(node):
+            name = _dotted(node.func)  # type: ignore[union-attr]
+            out.append(_Finding(
+                "SPAC208", node.lineno,
+                f"{name}() inside a loop body re-sorts on every iteration",
+                hint="hoist it: sort once per call (batch axis) or memoise "
+                     "per trace via repro.sim.timeline"))
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                visit(child, False)     # new scope resets loop context
+            elif isinstance(child, ast.For):
+                # the iterable is evaluated once — `for k in np.argsort(x)`
+                # is a single sort, not a per-iteration one
+                visit(child.target, in_loop)
+                visit(child.iter, in_loop)
+                for stmt in child.body + child.orelse:
+                    visit(stmt, True)
+            elif isinstance(child, ast.While):
+                for grand in ast.iter_child_nodes(child):
+                    visit(grand, True)
+            else:
+                visit(child, in_loop)
+
+    visit(tree, False)
+    return out
+
+
 _PASSES = (_check_mutable_defaults, _check_global_np_random,
            _check_wallclock_keys, _check_set_iteration,
-           _check_jit_mutable_globals, _check_x64, _check_jit_in_loop)
+           _check_jit_mutable_globals, _check_x64, _check_jit_in_loop,
+           _check_sort_in_loop)
 
 
 # --------------------------------------------------------------------------

@@ -159,6 +159,7 @@ def _apply_overrides(scenario, args):
             delta=args.delta,
             top_k=args.top_k,
             verify_engine=args.verify_engine,
+            use_kernel=getattr(args, "use_kernel", None),
             flit_bits=args.flit_bits,
             co_design=co_design,
         )
@@ -183,7 +184,7 @@ def _apply_overrides(scenario, args):
 
 
 def _add_override_flags(p: argparse.ArgumentParser) -> None:
-    from repro.core.dse import VERIFY_ENGINES
+    from repro.core.dse import USE_KERNEL_MODES, VERIFY_ENGINES
     g = p.add_argument_group("scenario overrides")
     g.add_argument("--sla-p99-ns", type=float, default=None,
                    help="p99 latency SLA in ns")
@@ -210,6 +211,10 @@ def _add_override_flags(p: argparse.ArgumentParser) -> None:
                    help="stage-4 fidelity rung: batched netsim (default), "
                         "cycle-accurate datapath for every survivor, or "
                         "auto (netsim front + cycle-sim champion)")
+    g.add_argument("--use-kernel", choices=USE_KERNEL_MODES, default=None,
+                   help="segmented netsim kernels for the batched stage-2/4 "
+                        "engines: auto (kernel when available, bit-exact "
+                        "oracle fallback), on, or off (legacy scans)")
     from repro.core.search import SEARCH_ALGORITHMS
     gs = p.add_argument_group(
         "search engine (generational NSGA-II instead of exhaustive "

@@ -129,6 +129,7 @@ def build_problem(
             back_annotation=scenario.fidelity.back_annotation,
             features=features,
             verify_engine=scenario.fidelity.verify_engine,
+            use_kernel=scenario.fidelity.use_kernel,
             protocol_space=scenario.protocol.space(),
             binding=scenario.semantic_binding(),
             flit_bits=scenario.flit_bits,
@@ -141,6 +142,7 @@ def build_problem(
         back_annotation=scenario.fidelity.back_annotation,
         features=features,
         verify_engine=scenario.fidelity.verify_engine,
+        use_kernel=scenario.fidelity.use_kernel,
         mesh=mesh)
     return problem, scenario.sla, budget
 
@@ -442,6 +444,7 @@ def _switch_group_key(s: Scenario) -> str:
         "flit_bits": s.flit_bits,
         "binding": s.binding,
         "back_annotation": s.fidelity.back_annotation,
+        "use_kernel": s.fidelity.use_kernel,
         "co_design": s.co_design,
     }, sort_keys=True)
 
@@ -452,7 +455,8 @@ def _verify_group_key(ctx: _Ctx) -> str:
     may ride one jitted netsim scan only if the same rung verifies both)."""
     if ctx.group_key is None:
         return None
-    return ctx.group_key + "|" + ctx.scenario.fidelity.verify_engine
+    return (ctx.group_key + "|" + ctx.scenario.fidelity.verify_engine
+            + "|" + ctx.scenario.fidelity.use_kernel)
 
 
 def run_campaign(

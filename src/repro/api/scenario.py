@@ -30,7 +30,7 @@ from typing import Any, Dict, Mapping, Optional, Tuple, Union
 from repro.core.archspec import (AUTO, ArchRequest, CustomKernelSpec,
                                  ForwardTableKind, SchedulerKind, VOQKind)
 from repro.core.binding import KNOWN_SEMANTICS, SemanticBinding
-from repro.core.dse import ResourceBudget, SLA, VERIFY_ENGINES
+from repro.core.dse import ResourceBudget, SLA, USE_KERNEL_MODES, VERIFY_ENGINES
 from repro.core.dsl import (CODESIGN_ADDR_CHOICES, CODESIGN_LENGTH_CHOICES,
                             CODESIGN_QOS_CHOICES, CODESIGN_SEQ_CHOICES, Field,
                             FieldSpec, Protocol, ProtocolSpace,
@@ -385,14 +385,30 @@ class Fidelity:
     #: cycle-accurate datapath for every survivor (slow); "auto" verifies the
     #: front with batched netsim and escalates only the champion to cycle-sim
     verify_engine: str = "netsim"
+    #: segmented netsim-kernel knob for the batched stage-2/4 engines:
+    #: "auto" (kernel when available, oracle fallback), "on", "off".
+    #: Bools normalise to "on"/"off" so JSON round-trips stay canonical.
+    use_kernel: str = "auto"
 
     def __post_init__(self):
         if self.verify_engine not in VERIFY_ENGINES:
             raise ValueError(f"unknown verify_engine {self.verify_engine!r}; "
                              f"known: {VERIFY_ENGINES}")
+        if isinstance(self.use_kernel, bool):
+            object.__setattr__(self, "use_kernel",
+                               "on" if self.use_kernel else "off")
+        if self.use_kernel not in USE_KERNEL_MODES:
+            raise ValueError(f"unknown use_kernel {self.use_kernel!r}; "
+                             f"known: {USE_KERNEL_MODES} or a bool")
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # "auto" is the default and resolves per-environment; omitting it
+        # keeps serialised scenarios (and their goldens) stable across
+        # versions that predate the knob
+        if d["use_kernel"] == "auto":
+            del d["use_kernel"]
+        return d
 
     @staticmethod
     def from_dict(d: Mapping[str, Any]) -> "Fidelity":
@@ -555,6 +571,7 @@ class Scenario:
         delta: Optional[float] = None,
         top_k: Optional[int] = None,
         verify_engine: Optional[str] = None,
+        use_kernel: Optional[str] = None,
         flit_bits: Optional[int] = None,
         co_design: Optional[bool] = None,
         devices: Optional[int] = None,
@@ -595,6 +612,8 @@ class Scenario:
             top_k=self.fidelity.top_k if top_k is None else top_k,
             verify_engine=(self.fidelity.verify_engine
                            if verify_engine is None else verify_engine),
+            use_kernel=(self.fidelity.use_kernel
+                        if use_kernel is None else use_kernel),
         )
         cd = self.co_design if co_design is None else co_design
         protocol = self.protocol

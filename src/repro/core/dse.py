@@ -33,6 +33,7 @@ __all__ = [
     "SLA",
     "ResourceBudget",
     "VERIFY_ENGINES",
+    "USE_KERNEL_MODES",
     "SurrogateResult",
     "VerifyResult",
     "DSEProblem",
@@ -57,6 +58,14 @@ __all__ = [
 #: "auto"    — netsim for the front, cycle-sim for the champion only
 #: (via the `escalate` hook).
 VERIFY_ENGINES = ("netsim", "cycle", "auto")
+
+#: `use_kernel` knob vocabulary — shared by the switch problem, the Scenario
+#: `Fidelity` spec and the CLI `--use-kernel` flag:
+#: "auto" — the segmented netsim kernels when available (bit-exact oracle
+#:          fallback otherwise; `SPAC_NETSIM_KERNEL=off` disables globally),
+#: "on"   — force the kernel engines,
+#: "off"  — force today's oracle scans (byte-identical legacy path).
+USE_KERNEL_MODES = ("auto", "on", "off")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,95 @@
+"""Admission-gated lean replay as a Pallas kernel, candidate-tiled.
+
+Like the crossbar kernel, one replay step is tiny (two ``[B, N]`` slack
+vectors), so the grid runs over *candidate blocks*: each program keeps the
+port-slack state for ``block_b`` candidates resident in VMEM scratch and
+walks the shared event timeline with a ``fori_loop``, processing one event
+per iteration lane-parallel across the batch.  Port gather/scatter is done
+by masking against a lane iota (ports are padded to the 128-lane boundary
+by ``ops.lean_replay``).  B×E work therefore maps to ``B/block_b`` grid
+blocks instead of B lanes inside one host scan.
+
+Contract (per batch row): dnow [1, m] float32, src/dst [1, m] int32 shared;
+svc [B, m] float32, admit [B, m] float32 (1.0 admitted / 0.0 dropped),
+pipe [B, 1] float32 per candidate → dep [B, m] float32 departure *offsets*.
+Implements the slack formulation (``ref.netsim_replay_slack_ref``) — the
+carries never hold absolute timestamps, so float32 survives long traces —
+and matches that oracle bit-for-bit in interpret mode
+(``tests/test_netsim_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _netsim_kernel(dnow_ref, src_ref, dst_ref, svc_ref, admit_ref, pipe_ref,
+                   dep_ref, in_s, out_s, *, m: int):
+    in_s[...] = jnp.zeros_like(in_s)
+    out_s[...] = jnp.zeros_like(out_s)
+    lane = jax.lax.broadcasted_iota(jnp.int32, in_s.shape, 1)   # [B, Np]
+    pipe = pipe_ref[...][:, 0]                                  # [B]
+
+    def body(k, _):
+        dtk = dnow_ref[0, k]
+        i = src_ref[0, k]
+        j = dst_ref[0, k]
+        s = pl.load(svc_ref, (slice(None), pl.ds(k, 1)))[:, 0]      # [B]
+        ad = pl.load(admit_ref, (slice(None), pl.ds(k, 1)))[:, 0] > 0.5
+        ins = jnp.maximum(in_s[...] - dtk, 0.0)
+        outs = jnp.maximum(out_s[...] - dtk, 0.0)
+        wait = jnp.maximum(
+            jnp.maximum(
+                jnp.max(jnp.where(lane == i, ins, 0.0), axis=1),
+                jnp.max(jnp.where(lane == j, outs, 0.0), axis=1)),
+            pipe)
+        dep = wait + s                                              # [B]
+        upd = ad[:, None]
+        in_s[...] = jnp.where((lane == i) & upd, dep[:, None], ins)
+        out_s[...] = jnp.where((lane == j) & upd, dep[:, None], outs)
+        pl.store(dep_ref, (slice(None), pl.ds(k, 1)), dep[:, None])
+        return 0
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pad", "block_b", "interpret"))
+def netsim_replay_padded(
+    dnow: jnp.ndarray,   # [1, m] float32
+    src: jnp.ndarray,    # [1, m] int32
+    dst: jnp.ndarray,    # [1, m] int32
+    svc: jnp.ndarray,    # [B, m] float32 (B a multiple of block_b)
+    admit: jnp.ndarray,  # [B, m] float32 (1.0 / 0.0)
+    pipe: jnp.ndarray,   # [B, 1] float32
+    *,
+    n_pad: int,          # ports padded to the lane boundary
+    block_b: int = 8,
+    interpret: bool = True,
+):
+    b, m = svc.shape
+    assert b % block_b == 0, (b, block_b)
+    kern = functools.partial(_netsim_kernel, m=m)
+    return pl.pallas_call(
+        kern,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, n_pad), jnp.float32),
+            pltpu.VMEM((block_b, n_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dnow, src, dst, svc, admit, pipe)

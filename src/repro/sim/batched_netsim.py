@@ -49,6 +49,7 @@ diverging.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -62,9 +63,11 @@ from repro.analysis.retrace import track
 from repro.core.archspec import SwitchArch, VOQKind
 from repro.core.binding import BoundProtocol
 from repro.core.dse import VerifyResult
+from repro.kernels.netsim import netsim_fixed_point, resolve_use_kernel
 
 from .backannotate import HardwareParams, annotate
-from .netsim import NetSimConfig, run_netsim, service_times, switch_arrival_times
+from .netsim import NetSimConfig, run_netsim, service_times
+from .timeline import stage4_timeline
 
 __all__ = ["run_netsim_batched"]
 
@@ -143,8 +146,8 @@ def _sharded_verify_engine(mesh, n_ports, d_max):
         out_specs=(cand, cand))))
 
 
-def _shared_cap_ok(end_b: np.ndarray, admit_b: np.ndarray, now: np.ndarray,
-                   cap: int) -> bool:
+def _shared_cap_ok(admit_b: np.ndarray, sorted_ends_b: np.ndarray,
+                   now: np.ndarray, cap: int) -> bool:
     """True iff the shared-buffer cap never binds in the unconstrained run.
 
     ``G(t_k) = admitted-before-k − #(admitted ends ≤ t_k)`` is the exact
@@ -152,10 +155,29 @@ def _shared_cap_ok(end_b: np.ndarray, admit_b: np.ndarray, now: np.ndarray,
     admissions end strictly after t_k, so counting departures over *all*
     admitted ends is safe).  If G < cap at every per-queue-admitted event,
     the cap could never have dropped a packet and the unconstrained dynamics
-    are the true dynamics."""
+    are the true dynamics.
+
+    ``sorted_ends_b`` is the candidate's ascending departure times with
+    dropped events mapped to +inf — sorted once for the whole batch by the
+    caller (one ``np.sort(where(admit, end, inf), axis=1)``) instead of a
+    fresh per-candidate ``np.sort`` inside the loop; the inf tail never
+    lands left of a finite ``now``, so ``side="right"`` counts are
+    unchanged."""
     g_before = np.cumsum(admit_b) - admit_b
-    departed = np.searchsorted(np.sort(end_b[admit_b]), now, side="right")
+    departed = np.searchsorted(sorted_ends_b, now, side="right")
     return not bool(np.any(admit_b & (g_before - departed >= cap)))
+
+
+def _sorted_admitted_ends(end: np.ndarray, admit: np.ndarray,
+                         rows: Sequence[int]) -> Dict[int, np.ndarray]:
+    """Batched replacement for the per-candidate ``np.sort`` the shared-cap
+    check used to do: one sort over the selected rows, dropped events pushed
+    to +inf so every row shares one [len(rows), m] sort."""
+    if not rows:
+        return {}
+    idx = np.asarray(rows)
+    sorted_ends = np.sort(np.where(admit[idx], end[idx], np.inf), axis=1)
+    return {int(b): sorted_ends[i] for i, b in enumerate(idx)}
 
 
 def _empty_result(hw: HardwareParams) -> VerifyResult:
@@ -174,12 +196,10 @@ def _run_group(archs, bounds, trace, hw_list, cfg,
     size, so mixed-header co-design batches are partitioned by
     ``header_bytes`` upstream and each partition shares one timeline."""
     n = archs[0].n_ports
-    t0 = np.asarray(trace.time_s, np.float64)
-    src = np.asarray(trace.src, np.int64) % n
-    dst = np.asarray(trace.dst, np.int64) % n
-    payload = np.asarray(trace.payload_bytes, np.int64)
+    tl4 = stage4_timeline(trace, n, bounds[0].header_bytes, cfg.prop_delay_s)
+    t0 = tl4.t0
     m = t0.size
-    wire = payload + bounds[0].header_bytes
+    wire = tl4.wire
     link_bps = trace.link_gbps * 1e9
     b_n = len(archs)
     if m == 0:
@@ -192,9 +212,8 @@ def _run_group(archs, bounds, trace, hw_list, cfg,
         svc[b], pipe[b] = service_times(arch, hw, wire, link_bps)
         depth[b] = arch.voq_depth
 
-    arr = switch_arrival_times(t0, src, wire, link_bps, cfg.prop_delay_s, n)
-    order = np.lexsort((np.arange(m), arr))    # == the heap's (time, pkt) order
-    now = arr[order]
+    order = tl4.order                          # == the heap's (time, pkt) order
+    now = tl4.now
     # ring modulus: a queue never holds more than min(depth, m) packets; the
     # static ring size rounds up to a power of two so sweeps with nearby sized
     # depths reuse one compiled scan
@@ -209,8 +228,8 @@ def _run_group(archs, bounds, trace, hw_list, cfg,
         svc_p = shard_pad(svc, k)
         with enable_x64():
             end, admit = _sharded_verify_engine(mesh_spec.build(), n, d_max)(
-                jnp.asarray(now), jnp.asarray(src[order], jnp.int32),
-                jnp.asarray(dst[order], jnp.int32),
+                jnp.asarray(now), jnp.asarray(tl4.src_o, jnp.int32),
+                jnp.asarray(tl4.dst_o, jnp.int32),
                 jnp.asarray(svc_p[:, order].T),
                 jnp.asarray(shard_pad(pipe, k)),
                 jnp.asarray(shard_pad(depth, k), jnp.int32),
@@ -218,15 +237,21 @@ def _run_group(archs, bounds, trace, hw_list, cfg,
     else:
         with enable_x64():
             end, admit = _verify_engine(
-                jnp.asarray(now), jnp.asarray(src[order], jnp.int32),
-                jnp.asarray(dst[order], jnp.int32), jnp.asarray(svc[:, order].T),
+                jnp.asarray(now), jnp.asarray(tl4.src_o, jnp.int32),
+                jnp.asarray(tl4.dst_o, jnp.int32), jnp.asarray(svc[:, order].T),
                 jnp.asarray(pipe), jnp.asarray(depth, jnp.int32),
                 jnp.asarray(mod), n_ports=n, d_max=d_max)
     end = np.asarray(end, np.float64)[:b_n]     # strip pad rows (no-op serial)
     admit = np.asarray(admit, bool)[:b_n]
 
-    t0_min = float(t0.min())
-    wire_e = wire[order]
+    t0_min = tl4.t0_min
+    wire_e = tl4.wire_e
+    # one batched sort replaces the per-candidate np.sort the shared-cap
+    # check used to run inside the loop below
+    sorted_ends = _sorted_admitted_ends(
+        end, admit,
+        [b for b in range(b_n)
+         if archs[b].voq is VOQKind.SHARED and int(depth[b]) >= 1])
     out: List[VerifyResult] = []
     for b, (arch, bound, hw) in enumerate(zip(archs, bounds, hw_list)):
         fallback = None
@@ -235,7 +260,7 @@ def _run_group(archs, bounds, trace, hw_list, cfg,
             # scan's ring check can't express an always-full queue
             fallback = "degenerate_depth"
         elif arch.voq is VOQKind.SHARED and not _shared_cap_ok(
-                end[b], admit[b], now, n * int(depth[b])):
+                admit[b], sorted_ends[b], now, n * int(depth[b])):
             # the global cap binds for this candidate: the per-queue-only scan
             # diverges
             fallback = "shared_cap"
@@ -266,6 +291,123 @@ def _run_group(archs, bounds, trace, hw_list, cfg,
     return out
 
 
+def _metrics_result(end_b, admit_b, order, t0, wire_e, t0_min, cfg, hw,
+                    m) -> VerifyResult:
+    """Reduce one candidate's (end, admit) to a VerifyResult — verbatim the
+    default path's reduction, so kernel-path results are bit-identical."""
+    latency = np.full(m, np.nan)
+    latency[order] = np.where(
+        admit_b, (end_b + cfg.prop_delay_s - t0[order]) * 1e9, np.nan)
+    done = ~np.isnan(latency)
+    lat = latency[done]
+    t_end = float(np.max(end_b, where=admit_b, initial=0.0))
+    delivered_bits = float(int(wire_e[admit_b].sum()) * 8)
+    duration = max(t_end - t0_min, 1e-12)
+    return VerifyResult(
+        p99_latency_ns=float(np.percentile(lat, 99)) if lat.size else math.inf,
+        mean_latency_ns=float(lat.mean()) if lat.size else math.inf,
+        drop_rate=int((~admit_b).sum()) / max(m, 1),
+        throughput_gbps=delivered_bits / duration / 1e9,
+        meta={"latency_ns": lat, "delivered": int(done.sum()),
+              "offered": int(m), "hw": hw, "engine": "batched_netsim"},
+    )
+
+
+def _run_group_kernel(archs, bounds, trace, hw_list, cfg,
+                      mesh_spec=None) -> List[VerifyResult]:
+    """The segmented-kernel twin of ``_run_group``.
+
+    Replaces the [B, N², D] ring scan with the speculative fixed point
+    (``kernels.netsim.netsim_fixed_point``): one lean port replay fused with
+    a segmented all-admitted fullness check settles the whole batch in a
+    single round when stage-3 sizing holds, and only dropping rows iterate.
+    Identical dynamics rows — NSGA-II batches repeat genomes — collapse to
+    one scan row and fan back out afterwards.  Departure times, admission
+    flags and every reduced metric are bit-identical to the default path
+    (same float64 arithmetic in the same order); rows the fixed point cannot
+    settle exactly (degenerate depth, binding shared cap, no convergence)
+    take the serial oracle, flagged in ``meta`` exactly like the default
+    path's fallbacks."""
+    n = archs[0].n_ports
+    tl4 = stage4_timeline(trace, n, bounds[0].header_bytes, cfg.prop_delay_s)
+    m = tl4.now.size
+    b_n = len(archs)
+    if m == 0:
+        return [_empty_result(hw) for hw in hw_list]
+    link_bps = trace.link_gbps * 1e9
+    order, now, t0 = tl4.order, tl4.now, tl4.t0
+
+    svc_e = np.empty((b_n, m), np.float64)      # event order (pre-permuted)
+    pipe = np.empty(b_n, np.float64)
+    depth = np.empty(b_n, np.int64)
+    for b, (arch, hw) in enumerate(zip(archs, hw_list)):
+        s, pipe[b] = service_times(arch, hw, tl4.wire, link_bps)
+        svc_e[b] = s[order]
+        depth[b] = arch.voq_depth
+
+    out: List[Optional[VerifyResult]] = [None] * b_n
+    fall: Dict[int, str] = {}
+    # candidate dedup: rows with identical (service times, pipe, depth, VOQ
+    # kind) have identical dynamics — one scan row serves them all
+    slot_of: Dict[Tuple, int] = {}
+    uniq_rows: List[int] = []
+    rep = np.full(b_n, -1, np.int64)
+    for b in range(b_n):
+        if int(depth[b]) < 1:
+            fall[b] = "degenerate_depth"
+            continue
+        key = (svc_e[b].tobytes(), float(pipe[b]), int(depth[b]),
+               archs[b].voq is VOQKind.SHARED)
+        slot = slot_of.setdefault(key, len(uniq_rows))
+        if slot == len(uniq_rows):
+            uniq_rows.append(b)
+        rep[b] = slot
+
+    uniq_res: List[Optional[VerifyResult]] = []
+    if uniq_rows:
+        ui = np.asarray(uniq_rows)
+        with enable_x64():
+            end, admit, conv, _rounds = netsim_fixed_point(
+                now, tl4.src_o.astype(np.int32), tl4.dst_o.astype(np.int32),
+                svc_e[ui], pipe[ui], depth[ui], n_ports=n, chain=tl4.chain,
+                mesh_spec=mesh_spec)
+        sorted_ends = _sorted_admitted_ends(
+            end, admit,
+            [i for i, b in enumerate(uniq_rows)
+             if archs[b].voq is VOQKind.SHARED and bool(conv[i])])
+        for i, b in enumerate(uniq_rows):
+            if not bool(conv[i]):
+                uniq_res.append(None)
+                fall[b] = "kernel_unconverged"
+                continue
+            if archs[b].voq is VOQKind.SHARED and not _shared_cap_ok(
+                    admit[i], sorted_ends[i], now, n * int(depth[b])):
+                uniq_res.append(None)
+                fall[b] = "shared_cap"
+                continue
+            uniq_res.append(_metrics_result(
+                end[i], admit[i], order, t0, tl4.wire_e, tl4.t0_min, cfg,
+                hw_list[b], m))
+
+    for b in range(b_n):
+        slot = int(rep[b])
+        if slot >= 0 and uniq_res[slot] is not None:
+            v = uniq_res[slot]
+            # duplicates share the (read-only by convention) arrays but get
+            # fresh meta dicts — callers annotate meta in place
+            out[b] = dataclasses.replace(
+                v, meta={**v.meta, "hw": hw_list[b]})
+        else:
+            # the fixed point defers to the serial oracle, flagged exactly
+            # like the default path
+            fb = fall.get(b) or fall.get(uniq_rows[slot], "kernel_unconverged")
+            v = run_netsim(archs[b], bounds[b], trace, hw=hw_list[b], cfg=cfg)
+            v.meta["shared_cap_fallback"] = fb == "shared_cap"
+            v.meta["fallback"] = fb
+            out[b] = v
+    return out
+
+
 def run_netsim_batched(
     archs: Sequence[SwitchArch],
     bound: Union[BoundProtocol, Sequence[BoundProtocol]],
@@ -276,6 +418,7 @@ def run_netsim_batched(
     back_annotation: bool = True,
     i_burst: float = 1.0,
     mesh=None,
+    use_kernel=False,
 ) -> List[VerifyResult]:
     """Verify a whole sized-candidate batch against one shared trace.
 
@@ -296,6 +439,13 @@ def run_netsim_batched(
     Memory: the scan carries a ``[B, N², min(max_depth, m)]`` float64 ring of
     departure times — ~34 MB for 64 candidates at 8 ports and depth 1024;
     chunk very large sweeps into multiple calls.
+
+    ``use_kernel`` selects the segmented-kernel engine (``"auto"``/``"on"``/
+    ``"off"`` or a bool; auto = on unless ``SPAC_NETSIM_KERNEL=off``): the
+    speculative fixed point of ``repro.kernels.netsim`` replaces the ring
+    scan, bit-identical per candidate, several times faster on sized sweeps
+    (see ``benchmarks/netsim_kernel.py``).  The default stays the ring-scan
+    path byte-for-byte.
     """
     if cfg is None:
         cfg = NetSimConfig()
@@ -324,15 +474,17 @@ def run_netsim_batched(
         raise ValueError(f"hw has {len(hw)} entries for {len(archs)} archs; "
                          "they must be index-aligned")
 
+    runner = (_run_group_kernel if resolve_use_kernel(use_kernel)
+              else _run_group)
     groups: Dict[Tuple[int, int], List[int]] = {}
     for i, a in enumerate(archs):
         groups.setdefault((a.n_ports, bounds[i].header_bytes), []).append(i)
     if len(groups) == 1:
-        return _run_group(archs, bounds, trace, hw, cfg, mesh_spec=mesh)
+        return runner(archs, bounds, trace, hw, cfg, mesh_spec=mesh)
     out: List[Optional[VerifyResult]] = [None] * len(archs)
     for idx in groups.values():
-        part = _run_group([archs[i] for i in idx], [bounds[i] for i in idx],
-                          trace, [hw[i] for i in idx], cfg, mesh_spec=mesh)
+        part = runner([archs[i] for i in idx], [bounds[i] for i in idx],
+                      trace, [hw[i] for i in idx], cfg, mesh_spec=mesh)
         for i, v in zip(idx, part):
             out[i] = v
     return out

@@ -43,6 +43,8 @@ from repro.core.binding import BoundProtocol
 from repro.core.dse import SurrogateResult
 
 from .backannotate import HardwareParams, annotate
+from .timeline import stage2_timeline
+from repro.kernels.netsim import resolve_use_kernel, segmented_occupancy
 from repro.kernels.xbar import xbar_contend
 
 __all__ = ["BatchedSurrogateResult", "run_surrogate_batched", "DEFAULT_QUANTILES"]
@@ -169,10 +171,17 @@ class BatchedSurrogateResult:
     def results(self) -> List[SurrogateResult]:
         """Materialise per-candidate ``SurrogateResult``s (serial-compatible)."""
         out = []
+        shared_rows = [b for b, a in enumerate(self.archs)
+                       if a.voq is VOQKind.SHARED]
+        if shared_rows:
+            # sort all shared rows at once instead of one np.sort per
+            # candidate inside the loop below
+            sorted_dep = np.sort(self.dep_end_s[shared_rows], axis=1)
+            sorted_of = {b: sorted_dep[i] for i, b in enumerate(shared_rows)}
         for b, (arch, hw) in enumerate(zip(self.archs, self.hw)):
             if arch.voq is VOQKind.SHARED:
                 m = self.t_s.size
-                departed = np.searchsorted(np.sort(self.dep_end_s[b]), self.t_s,
+                departed = np.searchsorted(sorted_of[b], self.t_s,
                                            side="right")
                 shared_occ = np.arange(m) - departed
             else:
@@ -193,20 +202,15 @@ class BatchedSurrogateResult:
 
 
 def _run_group(archs, bounds, trace, hw_list, use_pallas, interpret, precision,
-               quantiles, mesh_spec=None):
+               quantiles, mesh_spec=None, use_kernel=False):
     """All candidates share n_ports; every other parameter — including the
     protocol's header wire-bytes under co-design — is a batch axis.  The
     shared arrival timeline is the trace's (candidate-independent), so mixed
     header widths still ride one jitted scan: the header only reshapes the
     per-candidate service times and delivered wire bits."""
     n = archs[0].n_ports
-    t = np.asarray(trace.time_s, np.float64)
-    src = np.asarray(trace.src, np.int64) % n
-    dst = np.asarray(trace.dst, np.int64) % n
-    payload = np.asarray(trace.payload_bytes, np.int64)
-    order = np.argsort(t, kind="stable")
-    t0 = t.min() if t.size else 0.0
-    t, src, dst, payload = t[order] - t0, src[order], dst[order], payload[order]
+    tl2 = stage2_timeline(trace, n)
+    t, src, dst, payload = tl2.t, tl2.src, tl2.dst, tl2.payload
     m = t.size
 
     b_n = len(archs)
@@ -236,7 +240,7 @@ def _run_group(archs, bounds, trace, hw_list, use_pallas, interpret, precision,
         dep = np.zeros((b_n, 0))
         thru = np.zeros(b_n)
     else:
-        dt = np.diff(t, prepend=t[:1])
+        dt = tl2.dt
         k = 1 if mesh_spec is None else mesh_spec.shard_axis
         if k > 1:
             # pad the candidate axis to the mesh extent (throwaway replicas
@@ -275,8 +279,15 @@ def _run_group(archs, bounds, trace, hw_list, use_pallas, interpret, precision,
         lat = (dep + pipe_s[:, None]) * 1e9
     quant = (np.percentile(lat, quantiles, axis=1).T if m
              else np.zeros((b_n, len(quantiles))))
-    occupancy = (_exact_occupancy(t, src * n + dst, dep_end)
-                 if m else np.zeros((b_n, 0), np.int64))
+    if m == 0:
+        occupancy = np.zeros((b_n, 0), np.int64)
+    elif use_kernel:
+        # one flat searchsorted over the whole [B, m] block (chain structure
+        # from the trace memo) — integer counts bit-identical to the serial
+        # per-row reference, asserted in tests/test_netsim_kernels.py
+        occupancy = segmented_occupancy(np.asarray(t), dep_end, tl2.chain)
+    else:
+        occupancy = _exact_occupancy(t, tl2.qid, dep_end)
     return BatchedSurrogateResult(
         archs=list(archs), hw=list(hw_list),
         latency_ns=np.asarray(lat, np.float64),
@@ -284,7 +295,8 @@ def _run_group(archs, bounds, trace, hw_list, use_pallas, interpret, precision,
         throughput_gbps=np.asarray(thru, np.float64),
         q_occupancy=occupancy, dep_end_s=dep_end, t_s=t,
         line_rate_feasible=feasible,
-        meta={"n_ports": n, "precision": precision, "use_pallas": use_pallas},
+        meta={"n_ports": n, "precision": precision, "use_pallas": use_pallas,
+              "use_kernel": bool(use_kernel)},
     )
 
 
@@ -301,6 +313,7 @@ def run_surrogate_batched(
     precision: str = "float64",
     quantiles: Sequence[float] = DEFAULT_QUANTILES,
     mesh=None,
+    use_kernel=False,
 ) -> BatchedSurrogateResult:
     """Evaluate a whole candidate batch against one shared trace.
 
@@ -324,11 +337,17 @@ def run_surrogate_batched(
     ``interpret=True`` (the default) validates it on CPU, ``interpret=False``
     compiles it for a real TPU backend.
 
+    ``use_kernel`` (``"auto"``/``"on"``/``"off"`` or a bool) switches the
+    exact occupancy count to the segmented flat-searchsorted kernel
+    (``repro.kernels.netsim.segmented_occupancy``) — bit-identical integer
+    counts, one pass over the whole batch instead of one per candidate.
+
     Memory: the result holds per-candidate sample arrays ([B, m] latencies,
     occupancy and departure times — stage 3 consumes the samples), so host
     memory scales as O(B·m); at ~1e5-packet traces budget ~2.5 MB/candidate
     and chunk very large sweeps into multiple calls.
     """
+    use_kernel = resolve_use_kernel(use_kernel)
     if use_pallas and precision == "float64":
         # the Pallas kernel is float32 by design (slack formulation); honour
         # that in the dtype, the meta, and the skipped enable_x64 — a silent
@@ -365,11 +384,13 @@ def run_surrogate_batched(
         groups.setdefault(a.n_ports, []).append(i)
     if len(groups) == 1:
         return _run_group(archs, bounds, trace, hw, use_pallas, interpret,
-                          precision, quantiles, mesh_spec=mesh)
+                          precision, quantiles, mesh_spec=mesh,
+                          use_kernel=use_kernel)
 
     parts = {n: _run_group([archs[i] for i in idx], [bounds[i] for i in idx],
                            trace, [hw[i] for i in idx], use_pallas, interpret,
-                           precision, quantiles, mesh_spec=mesh)
+                           precision, quantiles, mesh_spec=mesh,
+                           use_kernel=use_kernel)
              for n, idx in groups.items()}
     # stitch [B, m] arrays back in input order (m is shared: one trace)
     first = next(iter(parts.values()))
@@ -382,7 +403,8 @@ def run_surrogate_batched(
         q_occupancy=np.empty((len(archs),) + first.q_occupancy.shape[1:], np.int64),
         dep_end_s=np.empty((len(archs),) + first.dep_end_s.shape[1:]),
         t_s=first.t_s, line_rate_feasible=np.empty(len(archs), bool),
-        meta={"precision": precision, "use_pallas": use_pallas})
+        meta={"precision": precision, "use_pallas": use_pallas,
+              "use_kernel": bool(use_kernel)})
     for n, idx in groups.items():
         part = parts[n]
         for row, i in enumerate(idx):

@@ -15,8 +15,10 @@ so engines are swappable pipeline stages (a batched variant is either native
       0   analytic           closed-form resource/timing model       ~µs
       1   surrogate          event-driven transaction model          ~ms
       2   batched_surrogate  one jitted contention scan, B at once   ~ms/batch
+      2   batched_surrogate[kernel]  + segmented occupancy kernel    ~ms/batch
       3   netsim             finite buffers, drops, retransmission   ~100ms
       3   batched_netsim     the same model, one jitted scan         ~ms/cand
+      3   batched_netsim[kernel]  segmented fixed-point kernel       ~µs/cand
       4   cycle              cycle-accurate JAX switch datapath      ~s
 
 Who uses which rung: DSE stage 1 prices candidates with the rung-0 resource
@@ -169,16 +171,33 @@ def _surrogate_evaluate(arch, bound, trace, *, hw=None, back_annotation=False,
 
 
 def _batched_surrogate_batch(archs, bound, trace, *, hw=None,
-                             back_annotation=False, i_burst=1.0, mesh=None):
+                             back_annotation=False, i_burst=1.0, mesh=None,
+                             use_kernel=False):
     res = run_surrogate_batched(list(archs), bound, trace, hw=hw,
                                 back_annotation=back_annotation,
-                                i_burst=i_burst, mesh=mesh)
+                                i_burst=i_burst, mesh=mesh,
+                                use_kernel=use_kernel)
     return [_surrogate_to_verify(sr) for sr in res.results()]
 
 
 def _batched_surrogate_evaluate(arch, bound, trace, *, hw=None,
                                 back_annotation=False, i_burst=1.0):
     return _batched_surrogate_batch(
+        [arch], bound, trace, hw=[hw] if hw is not None else None,
+        back_annotation=back_annotation, i_burst=i_burst)[0]
+
+
+def _batched_surrogate_kernel_batch(archs, bound, trace, *, hw=None,
+                                    back_annotation=False, i_burst=1.0,
+                                    mesh=None):
+    return _batched_surrogate_batch(
+        archs, bound, trace, hw=hw, back_annotation=back_annotation,
+        i_burst=i_burst, mesh=mesh, use_kernel=True)
+
+
+def _batched_surrogate_kernel_evaluate(arch, bound, trace, *, hw=None,
+                                       back_annotation=False, i_burst=1.0):
+    return _batched_surrogate_kernel_batch(
         [arch], bound, trace, hw=[hw] if hw is not None else None,
         back_annotation=back_annotation, i_burst=i_burst)[0]
 
@@ -195,15 +214,32 @@ def _netsim_evaluate(arch, bound, trace, *, hw=None, back_annotation=False,
 
 def _batched_netsim_batch(archs, bound, trace, *, hw=None,
                           back_annotation=False, i_burst=1.0, cfg=None,
-                          mesh=None):
+                          mesh=None, use_kernel=False):
     return run_netsim_batched(list(archs), bound, trace, hw=hw, cfg=cfg,
                               back_annotation=back_annotation,
-                              i_burst=i_burst, mesh=mesh)
+                              i_burst=i_burst, mesh=mesh,
+                              use_kernel=use_kernel)
 
 
 def _batched_netsim_evaluate(arch, bound, trace, *, hw=None,
                              back_annotation=False, i_burst=1.0, cfg=None):
     return _batched_netsim_batch(
+        [arch], bound, trace, hw=[hw] if hw is not None else None,
+        back_annotation=back_annotation, i_burst=i_burst, cfg=cfg)[0]
+
+
+def _batched_netsim_kernel_batch(archs, bound, trace, *, hw=None,
+                                 back_annotation=False, i_burst=1.0, cfg=None,
+                                 mesh=None):
+    return _batched_netsim_batch(
+        archs, bound, trace, hw=hw, back_annotation=back_annotation,
+        i_burst=i_burst, cfg=cfg, mesh=mesh, use_kernel=True)
+
+
+def _batched_netsim_kernel_evaluate(arch, bound, trace, *, hw=None,
+                                    back_annotation=False, i_burst=1.0,
+                                    cfg=None):
+    return _batched_netsim_kernel_batch(
         [arch], bound, trace, hw=[hw] if hw is not None else None,
         back_annotation=back_annotation, i_burst=i_burst, cfg=cfg)[0]
 
@@ -238,11 +274,21 @@ register_engine(
     _batched_surrogate_batch,
     doc="the transaction model as one jitted contention scan over the batch")
 register_engine(
+    "batched_surrogate[kernel]", 2, _batched_surrogate_kernel_evaluate,
+    _batched_surrogate_kernel_batch,
+    doc="rung 2 with the segmented occupancy kernel (bit-identical counts)")
+register_engine(
     "netsim", 3, _netsim_evaluate,
     doc="finite-buffer event-driven verifier (drops, retransmission)")
 register_engine(
     "batched_netsim", 3, _batched_netsim_evaluate, _batched_netsim_batch,
     doc="the finite-buffer verifier as one jitted scan, sized depths batched")
+register_engine(
+    "batched_netsim[kernel]", 3, _batched_netsim_kernel_evaluate,
+    _batched_netsim_kernel_batch,
+    doc="rung 3 via the segmented fixed-point kernel (lean replay + chain "
+        "admission), bit-identical results, serial-oracle fallback on "
+        "unconverged rows")
 register_engine(
     "cycle", 4, _cycle_evaluate,
     doc="cycle-accurate JAX switch datapath (the repo's 'real hardware')")

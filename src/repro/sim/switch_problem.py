@@ -21,6 +21,7 @@ from repro.core.dse import (
     ResourceBudget,
     SLA,
     SurrogateResult,
+    USE_KERNEL_MODES,
     VERIFY_ENGINES,
     VerifyResult,
     depth_for_drop_rate,
@@ -129,10 +130,14 @@ class SwitchDSEProblem(DSEProblem):
         flit_bits: Optional[int] = None,
         require_seq: bool = False,
         mesh=None,
+        use_kernel: str = "auto",
     ):
         if verify_engine not in VERIFY_ENGINES:
             raise ValueError(f"unknown verify_engine {verify_engine!r}; "
                              f"known: {VERIFY_ENGINES}")
+        if not isinstance(use_kernel, bool) and use_kernel not in USE_KERNEL_MODES:
+            raise ValueError(f"unknown use_kernel {use_kernel!r}; "
+                             f"known: {USE_KERNEL_MODES} or a bool")
         self.request = request
         self.trace = trace
         # optional launch.mesh.MeshSpec: shards the stage-2/stage-4 batched
@@ -160,6 +165,9 @@ class SwitchDSEProblem(DSEProblem):
         self.back_annotation = back_annotation
         self.headroom = headroom
         self.verify_engine = verify_engine
+        # "auto"|"on"|"off"|bool — resolved per batch call so the
+        # SPAC_NETSIM_KERNEL kill-switch works mid-session
+        self.use_kernel = use_kernel
         payload = np.asarray(trace.payload_bytes)
         self._max_payload = int(payload.max()) if payload.size else 0
         self._variable_payload = bool(payload.size
@@ -338,7 +346,7 @@ class SwitchDSEProblem(DSEProblem):
             self.trace,
             back_annotation=self.back_annotation,
             i_burst=self.features.i_burst,
-            mesh=self.mesh_spec).results()
+            mesh=self.mesh_spec, use_kernel=self.use_kernel).results()
 
     # ------------------------------------------------------------- stage 3
     def size_buffers(self, c, q_occupancy: np.ndarray, eps: float):
@@ -380,7 +388,7 @@ class SwitchDSEProblem(DSEProblem):
             self.trace,
             back_annotation=self.back_annotation,
             i_burst=self.features.i_burst,
-            mesh=self.mesh_spec)
+            mesh=self.mesh_spec, use_kernel=self.use_kernel)
 
     def escalate(self, c, v: VerifyResult) -> Optional[VerifyResult]:
         """``verify_engine="auto"``: the front was verified by batched netsim;

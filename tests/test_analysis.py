@@ -285,6 +285,35 @@ def test_lint_jit_in_loop():
     """) == []
 
 
+def test_lint_sort_in_loop():
+    diags = _lint("""
+        import numpy as np
+        for b in range(8):
+            ends = np.sort(dep[b])
+    """)
+    assert [d.code for d in diags] == ["SPAC208"]
+    assert "loop body" in diags[0].message
+    # the For iterable is evaluated once — a sort there is not per-iteration
+    assert _lint("""
+        import numpy as np
+        for k in np.argsort(times, kind="stable"):
+            use(k)
+    """) == []
+    # batch-axis sort outside the loop is the sanctioned fix
+    assert _lint("""
+        import numpy as np
+        ends = np.sort(dep, axis=1)
+        for b in range(8):
+            use(ends[b])
+    """) == []
+    # a while condition re-evaluates every iteration, so it does count
+    assert [d.code for d in _lint("""
+        import numpy as np
+        while np.lexsort((a, b))[0] != 0:
+            step()
+    """)] == ["SPAC208"]
+
+
 def test_lint_suppression_comment():
     line = "def f(xs=[]):  # spaclint: disable=SPAC201\n    pass\n"
     assert _lint(line) == []
