@@ -1,0 +1,124 @@
+"""Serving throughput: 64 interleaved requests through ``DSEServeEngine``.
+
+The serve acceptance story in one table: 64 scenario requests (8 unique
+(scenario, seed) pairs over hft + datacenter, round-robin interleaved) fan
+through one engine's fixed-width chunks and content-addressed caches, and
+the aggregate stage-2 candidate rate must hold the line against the batched
+campaign path over the same unique scenarios, while mean per-request latency
+sits well below 64 serial ``run_scenario`` calls — the cache answers every
+repeat without touching a simulator (hit counters are asserted, not
+eyeballed).  The campaign baseline is measured one-shot, compiles included,
+because that is the cost a long-lived warm service exists to amortise; the
+measured engine itself runs jit-warm with cold caches.
+
+    python -m benchmarks.serve_throughput
+"""
+
+import time
+
+from .common import emit
+
+N_REQUESTS = 64
+NAMES = ("hft", "datacenter")
+SEEDS = (0, 1, 2, 3)
+
+
+def _tiny(name, seed):
+    from repro.api import registry
+    return registry[name].override(
+        back_annotation=False, top_k=2,
+        trace_params={"duration_s": 8e-5, "seed": seed})
+
+
+def run():
+    from repro.api import run_campaign, run_scenario
+    from repro.api.service import DSEServeEngine
+
+    uniques = [(n, s) for n in NAMES for s in SEEDS]
+    order = [uniques[i % len(uniques)] for i in range(N_REQUESTS)]
+
+    # ---- baseline 1: the batched campaign over the same unique scenarios,
+    # measured as users run it (`spac sweep`, one shot — compiles included,
+    # exactly the cost the long-lived service amortises away)
+    camp = run_campaign([_tiny(n, s) for n, s in uniques],
+                        name="serve-baseline")
+    camp_cps = camp.stage2_cands_per_sec
+
+    # ---- warm the service's chunk shapes (a long-running server is warm by
+    # definition; steady-state is what the measured engine below sees)
+    warm = DSEServeEngine(slots=8, batch_width=64, verify_width=16)
+    for n, s in uniques:
+        warm.submit(_tiny(n, s))
+    warm.run_until_drained()
+
+    # ---- baseline 2: one warm standalone run_scenario (the serial
+    # yardstick — x64 of these is what 64 requests cost without the service)
+    t0 = time.perf_counter()
+    run_scenario(_tiny("hft", 0))
+    serial_time_s = time.perf_counter() - t0
+
+    # ---- the service: 64 interleaved requests, one fresh engine (cold
+    # caches, warm jit) so the cache-hit counters are exact
+    eng = DSEServeEngine(slots=8, batch_width=64, verify_width=16)
+    t0 = time.perf_counter()
+    reqs = [eng.submit(_tiny(n, s)) for n, s in order]
+    done = eng.run_until_drained()
+    serve_time_s = time.perf_counter() - t0
+    stats = eng.stats()
+
+    assert len(done) == N_REQUESTS and all(r.report is not None for r in done)
+    assert stats["report_misses"] == len(uniques), stats
+    assert stats["report_hits"] == N_REQUESTS - len(uniques), stats
+
+    lat = sorted(r.wall_time_s for r in reqs)
+    mean_time_s = sum(lat) / len(lat)
+    p95_time_s = lat[int(0.95 * (len(lat) - 1))]
+    serve_cps = stats["stage2_cands_per_sec"]
+    serial64_time_s = serial_time_s * N_REQUESTS
+
+    # a request must never wait anything like the serial fleet cost, and on
+    # average must sit well below it (the cache answers 7 of every 8)
+    assert lat[-1] < serial64_time_s, (lat[-1], serial64_time_s)
+    assert mean_time_s < serial64_time_s / 2, (mean_time_s, serial64_time_s)
+
+    cps_ok = serve_cps >= camp_cps
+    emit("serve/requests", serve_time_s * 1e6 / N_REQUESTS,
+         f"{N_REQUESTS} reqs ({len(uniques)} unique) in {serve_time_s:.2f}s; "
+         f"{N_REQUESTS / serve_time_s:.1f} req/s")
+    emit("serve/stage2_cands_per_sec", 0.0,
+         f"{serve_cps:.0f} vs campaign {camp_cps:.0f} "
+         f"({'PASS' if cps_ok else 'FAIL'} >= campaign bar)")
+    emit("serve/cache", 0.0,
+         f"report {stats['report_hits']} hit / {stats['report_misses']} miss; "
+         f"trace {stats['trace_hits']}/{stats['trace_misses']}; "
+         f"problem {stats['problem_hits']}/{stats['problem_misses']}")
+    emit("serve/latency_mean", mean_time_s * 1e6,
+         f"p95 {p95_time_s * 1e6:.0f}us; serial x{N_REQUESTS} would be "
+         f"{serial64_time_s:.1f}s")
+    assert cps_ok, (
+        f"serve aggregate stage-2 rate regressed below the batched campaign "
+        f"path: {serve_cps:.0f} < {camp_cps:.0f} cand/s")
+
+    return {
+        "n_requests": N_REQUESTS,
+        "n_unique": len(uniques),
+        "serve_time_s": serve_time_s,
+        "requests_per_sec": N_REQUESTS / serve_time_s,
+        "serve_stage2_cands_per_sec": serve_cps,
+        "campaign_stage2_cands_per_sec": camp_cps,
+        "serve_vs_campaign": serve_cps / camp_cps,
+        "request_mean_time_s": mean_time_s,
+        "request_p95_time_s": p95_time_s,
+        "serial_scenario_time_s": serial_time_s,
+        "report_hits": stats["report_hits"],
+        "report_misses": stats["report_misses"],
+        "stage2_rows": stats["stage2_rows"],
+        "stage2_pad_rows": stats["stage2_pad_rows"],
+        "stage2_chunks": stats["stage2_chunks"],
+        "stage4_rows": stats["stage4_rows"],
+        "stage4_pad_rows": stats["stage4_pad_rows"],
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -41,18 +41,14 @@ def main():
         eng.submit(r)
 
     t0 = time.time()
-    ticks = 0
-    while (eng._queue or eng._active) and ticks < 10_000:
-        eng.step()
-        ticks += 1
+    finished = eng.run_until_drained(max_ticks=10_000)
     dt = time.time() - t0
-    done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
-    print(f"{done}/{len(reqs)} requests served, {toks} tokens in {ticks} engine "
-          f"ticks ({dt:.1f}s, {toks/dt:.1f} tok/s on CPU, slots={args.slots})")
+    print(f"{len(finished)}/{len(reqs)} requests served, {toks} tokens "
+          f"({dt:.1f}s, {toks/dt:.1f} tok/s on CPU, slots={args.slots})")
     for r in reqs[:4]:
         print(f"  req{r.rid}: prompt{list(r.prompt[:4])}… -> {r.out}")
-    assert done == len(reqs)
+    assert len(finished) == len(reqs) and all(r.done for r in finished)
 
 
 if __name__ == "__main__":

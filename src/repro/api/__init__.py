@@ -3,8 +3,10 @@
 One serializable ``Scenario`` spec carries an experiment from protocol
 definition to verified Pareto front; ``registry`` holds the paper's workload
 scenarios; ``run_scenario``/``run_campaign`` execute one or many (campaigns
-share trace analysis and batch stage 2 across scenarios); ``repro.api.cli``
-is the ``spac`` console entry point.
+share trace analysis and batch stage 2 across scenarios); ``DSEServeEngine``
+/``Client`` serve a stream of scenario requests through shared fixed-width
+jitted calls with content-addressed caching; ``repro.api.cli`` is the
+``spac`` console entry point.
 """
 
 from .registry import ScenarioRegistry, registry
@@ -12,10 +14,12 @@ from .runner import (CampaignReport, ScenarioReport, build_bound,
                      build_problem, run_campaign, run_scenario)
 from .scenario import (CommModelSpec, Fidelity, FieldSpec, PROTOCOL_BUILDERS,
                        ProtocolSpec, Scenario, SearchSpec, TraceSpec)
+from .service import Client, DSEServeEngine, ServeRequest, strip_times
 
 __all__ = [
-    "CampaignReport", "CommModelSpec", "Fidelity", "FieldSpec",
-    "PROTOCOL_BUILDERS", "ProtocolSpec", "Scenario", "ScenarioRegistry",
-    "ScenarioReport", "SearchSpec", "TraceSpec", "build_bound",
-    "build_problem", "registry", "run_campaign", "run_scenario",
+    "CampaignReport", "Client", "CommModelSpec", "DSEServeEngine",
+    "Fidelity", "FieldSpec", "PROTOCOL_BUILDERS", "ProtocolSpec", "Scenario",
+    "ScenarioRegistry", "ScenarioReport", "ServeRequest", "SearchSpec",
+    "TraceSpec", "build_bound", "build_problem", "registry", "run_campaign",
+    "run_scenario", "strip_times",
 ]

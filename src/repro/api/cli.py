@@ -13,6 +13,14 @@
         spac run hft --search nsga2 --checkpoint-dir ckpt --resume
     spac sweep hft underwater industry         # campaign over registry names
     spac sweep --config campaign.json          # campaign from a config file
+    spac serve hft datacenter --repeat 4       # continuous-batched DSE service
+    spac serve --requests reqs.json --out served.json --stats
+
+Serve request schema (JSON): a list of entries; each entry is a registry
+name, a scenario dict, or ``{"base"|"scenario": ..., "seed": ..., "repeat":
+N, ...overrides}`` — the scenario part resolves exactly like a campaign
+entry, ``seed`` overrides the trace generator seed, ``repeat`` enqueues the
+request N times (cache-hit fodder).
 
 Campaign config schema (JSON): either a plain list of entries or
 ``{"name": ..., "scenarios": [...]}``; each entry is a registry name, a full
@@ -324,6 +332,35 @@ def build_parser() -> argparse.ArgumentParser:
     wp.add_argument("--out", default=None, metavar="FILE",
                     help="write the campaign report as JSON")
     wp.add_argument("-v", "--verbose", action="store_true")
+
+    vp = sub.add_parser(
+        "serve",
+        help="continuously-batched DSE service: scenario requests share "
+             "fixed-width jitted stage-2/stage-4 calls and content-addressed "
+             "trace/problem/report caches — repeat traffic is answered "
+             "without touching a simulator")
+    vp.add_argument("scenarios", nargs="*",
+                    help="registry names or .json paths to enqueue")
+    vp.add_argument("--requests", default=None, metavar="FILE",
+                    help="request list JSON (see module docstring)")
+    vp.add_argument("--repeat", type=int, default=1, metavar="N",
+                    help="enqueue each positional scenario N times")
+    vp.add_argument("--seed", type=int, action="append", default=None,
+                    metavar="S", help="trace seed(s); repeatable — each "
+                    "positional scenario is enqueued once per seed")
+    vp.add_argument("--slots", type=int, default=4,
+                    help="concurrent requests multiplexed per tick")
+    vp.add_argument("--batch-width", type=int, default=64,
+                    help="fixed stage-2 surrogate chunk width (rows)")
+    vp.add_argument("--verify-width", type=int, default=16,
+                    help="fixed stage-4 netsim chunk width (rows)")
+    vp.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="shard every chunk over N devices (bit-identical "
+                         "results at any device count)")
+    vp.add_argument("--out", default=None, metavar="FILE",
+                    help="write per-request reports + engine stats as JSON")
+    vp.add_argument("--stats", action="store_true",
+                    help="print cache/chunk counters after draining")
     return p
 
 
@@ -427,10 +464,79 @@ def _cmd_sweep(args) -> int:
     return 0 if all(r.best is not None for r in report.reports) else 1
 
 
+def _serve_requests(args):
+    """CLI inputs → [(Scenario, seed|None)] in submission order."""
+    pairs = []
+    seeds = args.seed if args.seed else [None]
+    for target in args.scenarios:
+        for s in seeds:
+            pairs.extend([(_load_scenario(target), s)] * max(args.repeat, 1))
+    if args.requests:
+        with open(args.requests) as f:
+            entries = json.load(f)
+        if not isinstance(entries, list):
+            raise SystemExit(f"{args.requests}: expected a JSON list")
+        for entry in entries:
+            seed, repeat = None, 1
+            if isinstance(entry, Mapping):
+                entry = dict(entry)
+                seed = entry.pop("seed", None)
+                repeat = int(entry.pop("repeat", 1))
+                inner = entry.pop("scenario", None)
+                if inner is not None:
+                    # {"scenario": name-or-dict, ...overrides}: the inner
+                    # spec is the base the remaining keys merge into
+                    if isinstance(inner, str):
+                        entry["base"] = inner
+                    else:
+                        entry = _deep_merge(inner, entry)
+            spec = resolve_entry(entry)
+            pairs.extend([(spec, seed)] * max(repeat, 1))
+    if not pairs:
+        raise SystemExit("serve needs scenario names or --requests FILE")
+    return pairs
+
+
+def _cmd_serve(args) -> int:
+    from .service import DSEServeEngine
+    pairs = _serve_requests(args)
+    eng = DSEServeEngine(slots=args.slots, batch_width=args.batch_width,
+                         verify_width=args.verify_width,
+                         mesh=_mesh_from_args(args))
+    for scenario, seed in pairs:
+        eng.submit(scenario, seed=seed)
+    finished = eng.run_until_drained()
+    stats = eng.stats()
+    for req in finished:
+        mark = "cached" if req.cached else f"{req.wall_time_s:6.2f}s"
+        tail = (f"error: {req.error}" if req.error
+                else f"best={req.report.get('best')}")
+        print(f"  {req.rid:>6s} {req.scenario.name:16s} [{mark}] {tail}")
+    n_err = sum(1 for r in finished if r.error)
+    print(f"served {len(finished)} request(s), {n_err} error(s); "
+          f"report cache {stats['report_hits']} hit / "
+          f"{stats['report_misses']} miss, "
+          f"stage2 {stats['stage2_rows']} rows / "
+          f"{stats['stage2_chunks']} chunks "
+          f"({stats['stage2_cands_per_sec']:.0f} cand/s)")
+    if args.stats:
+        print(json.dumps({k: v for k, v in stats.items()},
+                         indent=2, sort_keys=True))
+    if args.out:
+        payload = {"requests": [dict(r.summary_dict(), report=r.report)
+                                for r in finished],
+                   "stats": stats}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote serve report to {args.out}")
+    return 0 if n_err == 0 else 1
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     args = build_parser().parse_args(argv)
     return {"list": _cmd_list, "show": _cmd_show, "check": _cmd_check,
-            "lint": _cmd_lint, "run": _cmd_run, "sweep": _cmd_sweep}[args.cmd](args)
+            "lint": _cmd_lint, "run": _cmd_run, "sweep": _cmd_sweep,
+            "serve": _cmd_serve}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -48,6 +48,7 @@ __all__ = [
     "finalize_result",
     "check_index_aligned",
     "depth_for_drop_rate",
+    "IncrementalDSE",
 ]
 
 
@@ -465,3 +466,148 @@ def run_dse(
     if verbose:
         print(log3)
     return finalize_result(problem, evaluated, best, best_v, logs + [log3])
+
+
+class IncrementalDSE:
+    """Algorithm 1 as a per-request state machine for an external batcher.
+
+    The staged functions above run one request's whole batch per call; the
+    serving engine (``repro.api.service``) instead multiplexes many
+    concurrent requests through *shared* fixed-width jitted calls, so it
+    needs each request's stage work exposed as "which candidates do you need
+    evaluated next, at which fidelity?".  An ``IncrementalDSE`` holds one
+    request's Algorithm-1 state:
+
+    * stage 1 runs at construction (host-side, cheap);
+    * ``kind``/``pending`` expose the current evaluation queue —
+      ``"surrogate"`` rows until stage 2 drains, then ``"verify"`` rows;
+    * the owner evaluates any *prefix* of ``pending`` (batched together with
+      other requests' rows) and hands the index-aligned results to
+      ``feed()``; when a queue drains the machine advances — screen → size →
+      verify → ``result``.
+
+    Feeding results chunk-at-a-time is exact because both batch hooks are
+    row-independent — the same invariant the campaign runner's
+    cross-scenario batching already relies on, so a served request's
+    ``DSEResult`` is identical to ``run_dse`` on the same problem.
+
+    With a ``SearchSpec``, stage 2 becomes the generational ask/tell loop
+    (``repro.core.search.SearchDriver``): ``pending`` is the current
+    generation's population, and a fully-fed generation advances the engine
+    exactly as the campaign's lockstep driver does.
+    """
+
+    def __init__(self, problem: DSEProblem, sla: SLA, budget: ResourceBudget,
+                 *, delta: float = 0.2, top_k: int = 8,
+                 search: Optional["SearchSpec"] = None,
+                 checkpoint_dir: Optional[str] = None, resume: bool = False):
+        self.problem = problem
+        self.sla = sla
+        self.budget = budget
+        self.top_k = top_k
+        self.kind = "surrogate"
+        self.stage2_candidates = 0      # rows this request fanned out
+        self.stage4_candidates = 0      # sized rows verified
+        self._logs: List[StageLog] = []
+        self._pending: List[Any] = []
+        self._fed: List[Any] = []
+        self._sized: List[Tuple[Any, Dict[str, float]]] = []
+        self._n_explored = 0
+        self._result: Optional[DSEResult] = None
+        self._driver = None
+        if search is not None:
+            from .search import SearchDriver
+            self._driver = SearchDriver(problem, search, sla, delta=delta,
+                                        checkpoint_dir=checkpoint_dir,
+                                        resume=resume)
+            self._ask()
+        else:
+            self._active, log1 = stage1_static(problem, delta=delta)
+            self._logs.append(log1)
+            self._pending = list(self._active)
+            self.stage2_candidates = len(self._active)
+            if not self._pending:
+                self._finish_stage2()
+
+    # -------------------------------------------------------------- queries
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    @property
+    def result(self) -> DSEResult:
+        if self._result is None:
+            raise ValueError("IncrementalDSE still has pending work")
+        return self._result
+
+    @property
+    def pending(self) -> List[Any]:
+        """Candidates awaiting evaluation at the current ``kind`` fidelity.
+        The owner may evaluate any prefix and ``feed()`` it back."""
+        return list(self._pending)
+
+    # ------------------------------------------------------------- advance
+    def _ask(self) -> None:
+        """Generational mode: advance to the next non-empty population (an
+        ask can come back empty when every genome was pruned or answered
+        from the phenotype cache — tell the engine and move on)."""
+        while not self._driver.done:
+            cands = self._driver.ask_candidates()
+            if cands:
+                self._pending = list(cands)
+                self._fed = []
+                return
+            self._driver.tell_candidates([])
+        self._finish_stage2()
+
+    def feed(self, results: Sequence[Any]) -> None:
+        """Hand back index-aligned results for the first ``len(results)``
+        entries of ``pending``; drained queues advance the stage machine."""
+        if self.done:
+            raise ValueError("IncrementalDSE is already finished")
+        results = list(results)
+        if len(results) > len(self._pending):
+            raise ValueError(
+                f"fed {len(results)} results for {len(self._pending)} "
+                "pending candidates; feed at most the pending prefix")
+        self._fed.extend(results)
+        del self._pending[:len(results)]
+        if self._pending:
+            return
+        if self.kind == "surrogate":
+            if self._driver is not None:
+                self._driver.tell_candidates(self._fed)
+                self._ask()
+            else:
+                self._finish_stage2()
+        else:
+            self._finish()
+
+    def _finish_stage2(self) -> None:
+        if self._driver is not None:
+            outcome = self._driver.finalize()
+            valid, log2 = outcome.valid, outcome.log
+            # finalize()'s archive re-surrogation (resume path) counts as
+            # stage-2 fan-out, matching run_scenario's accounting
+            self.stage2_candidates = outcome.surrogate_rows
+        else:
+            valid, log2 = stage2_screen(self.problem, self._active, self.sla,
+                                        surrogates=self._fed)
+        self._logs.append(log2)
+        self._sized, self._n_explored = stage3_size(
+            self.problem, valid, self.sla, self.budget, top_k=self.top_k)
+        self.kind = "verify"
+        self._pending = [a for a, _ in self._sized]
+        self._fed = []
+        self.stage4_candidates = len(self._sized)
+        if not self._pending:
+            self._finish()
+
+    def _finish(self) -> None:
+        evaluated, best, best_v = stage4_verify(self.problem, self._sized,
+                                                self.sla, verifies=self._fed)
+        log3 = StageLog("stage3-sizing+verify", self._n_explored,
+                        len(self._sized))
+        self._result = finalize_result(self.problem, evaluated, best, best_v,
+                                       self._logs + [log3])
+        self.kind = "done"

@@ -1,3 +1,5 @@
-"""Batched serving engine over the jitted decode step."""
+"""Continuous-batching serving: the shared slot-array core + token engine."""
 from .engine import Request, ServeEngine
-__all__ = ["Request", "ServeEngine"]
+from .slots import SlotArray
+
+__all__ = ["Request", "ServeEngine", "SlotArray"]

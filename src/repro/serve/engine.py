@@ -3,13 +3,22 @@
 ``ServeEngine`` keeps a fixed-width slot array (the serving batch); requests
 occupy free slots, finished sequences free them — the standard continuous-
 batching loop, scale-invariant because the jitted ``decode_step`` shape never
-changes.  Sampling: greedy or temperature.
+changes.  Sampling: greedy or temperature.  The slot bookkeeping itself
+(admission queue, rid ownership, completion-ordered harvest) lives in
+:class:`repro.serve.slots.SlotArray`, shared with the DSE serving engine.
+
+Tick accounting (the contract ``tests/test_train_runtime.py`` locks): prefill
+and decode share the tick.  On the tick a request's last prompt token is fed,
+``_fed`` has already advanced past the prompt, so that decode's logits — the
+prefill-final logits — are **sampled, not discarded**: the first generated
+token lands on tick ``len(prompt)`` and a request completes in exactly
+``len(prompt) + max_new - 1`` ticks with exactly ``max_new`` output tokens.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +26,8 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig, ShardingPlan
+
+from .slots import SlotArray
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -29,6 +40,10 @@ class Request:
     temperature: float = 0.0
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: prompt cursor, owned by the engine.  Declared on the dataclass (it
+    #: used to be injected at admission) so a queued-but-unadmitted request
+    #: is a complete object — touching it can never raise AttributeError.
+    _fed: int = 0
 
 
 class ServeEngine:
@@ -40,33 +55,27 @@ class ServeEngine:
         self.s_max = s_max
         self.key = jax.random.PRNGKey(seed)
         self.state, _ = T.init_decode_state(cfg, plan, slots, s_max)
-        self._active: Dict[int, Request] = {}
-        self._slot_req: List[Optional[int]] = [None] * slots
-        self._queue: List[Request] = []
+        self._slots: SlotArray[Request] = SlotArray(slots)
         self._decode = jax.jit(
             lambda params, state, tok: T.decode_step(params, cfg, plan, mesh, state, tok))
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: Request):
-        self._queue.append(req)
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        self._slots.submit(req.rid, req)
 
-    def _admit(self):
-        for i in range(self.slots):
-            if self._slot_req[i] is None and self._queue:
-                req = self._queue.pop(0)
-                self._slot_req[i] = req.rid
-                self._active[req.rid] = req
-                req._fed = 0            # prompt cursor
+    @property
+    def drained(self) -> bool:
+        return self._slots.drained
 
     # ----------------------------------------------------------------- step
     def step(self) -> int:
         """One engine tick = one decode_step over the slot batch."""
-        self._admit()
+        for _, _, req in self._slots.admit():
+            req._fed = 0            # reset the prompt cursor: slots are reused
         tok = np.zeros((self.slots, 1), np.int32)
-        for i, rid in enumerate(self._slot_req):
-            if rid is None:
-                continue
-            req = self._active[rid]
+        for i, _, req in self._slots.active_slots():
             if req._fed < len(req.prompt):
                 tok[i, 0] = req.prompt[req._fed]
                 req._fed += 1
@@ -74,10 +83,7 @@ class ServeEngine:
                 tok[i, 0] = req.out[-1]
         self.state, logits = self._decode(self.params, self.state, jnp.asarray(tok))
         logits = np.asarray(logits[:, 0].astype(jnp.float32))
-        for i, rid in enumerate(self._slot_req):
-            if rid is None:
-                continue
-            req = self._active[rid]
+        for i, _, req in list(self._slots.active_slots()):
             if req._fed < len(req.prompt):
                 continue                       # still prefilling this slot
             if req.temperature > 0:
@@ -88,15 +94,14 @@ class ServeEngine:
             req.out.append(nxt)
             if len(req.out) >= req.max_new:
                 req.done = True
-                self._slot_req[i] = None
-                del self._active[rid]
-        return sum(r is not None for r in self._slot_req)
+                self._slots.finish(i)
+        return len(self._slots)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen = set()
+        """Tick until queue and slots are empty; returns every completed
+        request exactly once, in completion order."""
         for _ in range(max_ticks):
-            if not self._queue and not self._active:
+            if self._slots.drained:
                 break
             self.step()
-        return finished
+        return self._slots.harvest()

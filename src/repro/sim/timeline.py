@@ -184,6 +184,13 @@ def stats() -> Dict[str, int]:
     return out
 
 
+def counters() -> Dict[str, int]:
+    """Flat build/hit counters only — ``stats()`` minus the per-key map.
+    Service dashboards (``spac serve``) fold this into their own counter
+    dict, where a nested ``builds_by_key`` blob would just be noise."""
+    return dict(_COUNTS)
+
+
 def clear() -> None:
     """Drop all memo entries and counters (test isolation)."""
     _STAGE2.clear()

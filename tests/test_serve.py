@@ -1,0 +1,234 @@
+"""Serving-path contracts: the shared slot array and the DSE serve engine.
+
+Two layers share one slot discipline (``repro.serve.slots.SlotArray``): the
+token server (``repro.serve.engine``) and the continuously-batched DSE
+service (``repro.api.service``).  This file locks the slot semantics —
+FIFO admission into the lowest free slot, loud duplicate-rid rejection,
+exactly-once completion-ordered harvest — and the service's headline
+contract: a served report is bit-identical to ``run_scenario`` on the same
+(scenario, seed), modulo the volatile ``*_time_s`` keys, no matter how
+requests interleave, chunk, pad, dedup, or shard across a device mesh.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.api import registry, run_scenario
+from repro.api.service import (Client, DSEServeEngine, request_key,
+                               strip_times)
+from repro.serve.slots import SlotArray
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tiny(name, **over):
+    return registry[name].override(back_annotation=False, top_k=2,
+                                   trace_params={"duration_s": 8e-5}, **over)
+
+
+# --------------------------------------------------------------------------
+# SlotArray semantics
+# --------------------------------------------------------------------------
+
+def test_slot_array_fifo_admission_and_reuse():
+    sa = SlotArray(2)
+    for rid in ("a", "b", "c", "d"):
+        sa.submit(rid, rid.upper())
+    assert sa.queued == 4 and len(sa) == 0     # admission is lazy
+    assert [(s, r) for s, r, _ in sa.admit()] == [(0, "a"), (1, "b")]
+    assert len(sa) == 2 and sa.queued == 2
+    assert sa.admit() == []                    # batch full: nothing admits
+    sa.finish(0)                               # slot 0 frees ...
+    assert [(s, r) for s, r, _ in sa.admit()] == [(0, "c")]  # ... and is reused
+    sa.finish(1)
+    sa.finish(0)
+    assert [(s, r) for s, r, _ in sa.admit()] == [(0, "d")]
+    sa.finish(0)
+    assert sa.drained
+    # harvest is completion-ordered and exactly-once
+    assert sa.harvest() == ["A", "B", "C", "D"]
+    assert sa.harvest() == []
+
+
+def test_slot_array_duplicate_rid_rejected_loudly():
+    sa = SlotArray(1)
+    sa.submit(7, "x")
+    with pytest.raises(ValueError, match="already in flight"):
+        sa.submit(7, "y")                      # still queued
+    sa.admit()
+    with pytest.raises(ValueError, match="already in flight"):
+        sa.submit(7, "y")                      # now active
+    sa.finish(0)
+    with pytest.raises(ValueError, match="already in flight"):
+        sa.submit(7, "y")                      # finished, awaiting harvest
+    assert sa.harvest() == ["x"]
+    sa.submit(7, "z")                          # harvested: rid is free again
+    assert [(s, r) for s, r, _ in sa.admit()] == [(0, 7)]
+
+
+def test_slot_array_finish_guards():
+    sa = SlotArray(2)
+    sa.submit("a", 1)
+    sa.admit()
+    with pytest.raises(ValueError):
+        sa.finish(1)                           # free slot
+    sa.finish(0)
+    with pytest.raises(ValueError):
+        sa.finish(0)                           # double finish
+
+
+def test_slot_array_validates_width():
+    with pytest.raises(ValueError):
+        SlotArray(0)
+
+
+# --------------------------------------------------------------------------
+# DSE serve engine: determinism, caching, interleaving
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_hft():
+    return _tiny("hft")
+
+
+@pytest.fixture(scope="module")
+def hft_golden(tiny_hft):
+    """The standalone single-scenario report every served variant must hit."""
+    return strip_times(run_scenario(tiny_hft).to_dict())
+
+
+def test_serve_matches_run_scenario_and_caches(tiny_hft, hft_golden):
+    cli = Client(slots=2, batch_width=16, verify_width=4)
+    first = cli.result(cli.submit(tiny_hft))
+    assert strip_times(first) == hft_golden
+    # repeat request: answered from the report cache, byte-identical
+    rep = cli.submit(tiny_hft)
+    assert cli.result(rep) == first
+    assert rep.cached
+    st = cli.engine.stats()
+    assert st["report_hits"] == 1 and st["report_misses"] == 1
+    assert st["stage2_rows"] > 0 and st["stage2_chunks"] > 0
+
+
+def test_serve_inflight_twins_compute_once(tiny_hft):
+    """Identical concurrent requests cost ONE computation: the twin waits on
+    the in-flight original and is served from the cache when it lands."""
+    eng = DSEServeEngine(slots=4, batch_width=16, verify_width=4)
+    a = eng.submit(tiny_hft)
+    b = eng.submit(tiny_hft)
+    done = eng.run_until_drained()
+    assert {r.rid for r in done} == {a.rid, b.rid}
+    assert a.report == b.report
+    assert b.cached and not a.cached
+    st = eng.stats()
+    assert st["report_misses"] == 1 and st["report_hits"] == 1
+
+
+def test_serve_seed_is_part_of_request_identity(tiny_hft):
+    assert request_key(tiny_hft) != request_key(
+        tiny_hft.override(trace_params={"seed": 3}))
+    cli = Client(slots=2, batch_width=16, verify_width=4)
+    base = cli.result(cli.submit(tiny_hft))
+    other = cli.result(cli.submit(tiny_hft, seed=3))
+    st = cli.engine.stats()
+    assert st["report_misses"] == 2 and st["report_hits"] == 0
+    # different trace seed -> different workload -> (at least) distinct keys
+    assert base["scenario"] != other["scenario"]
+
+
+def test_serve_interleaved_scenarios_stay_deterministic(tiny_hft, hft_golden):
+    """hft and datacenter requests sharing the engine — different problems,
+    different chunk groups — each still reproduce their standalone report."""
+    tiny_dc = _tiny("datacenter")
+    dc_golden = strip_times(run_scenario(tiny_dc).to_dict())
+    eng = DSEServeEngine(slots=4, batch_width=16, verify_width=4)
+    reqs = [eng.submit(s) for s in (tiny_hft, tiny_dc, tiny_hft, tiny_dc)]
+    done = eng.run_until_drained()
+    assert len(done) == 4 and all(r.report is not None for r in done)
+    for req, want in zip(reqs, (hft_golden, dc_golden) * 2):
+        assert strip_times(req.report) == want
+    st = eng.stats()
+    assert st["report_misses"] == 2 and st["report_hits"] == 2
+    assert st["problem_entries"] == 2
+
+
+def test_serve_nsga2_search_matches_run_scenario():
+    """Search-mode requests: stage 2 is the generational ask/tell loop fed
+    chunk-at-a-time by the engine — the front must not move."""
+    from repro.api.scenario import SearchSpec
+    spec = _tiny("hft", search=SearchSpec(population=8, generations=3, seed=0))
+    want = strip_times(run_scenario(spec).to_dict())
+    cli = Client(slots=2, batch_width=16, verify_width=4)
+    got = cli.result(cli.submit(spec))
+    assert strip_times(got) == want
+
+
+def test_serve_use_kernel_on_matches_run_scenario():
+    spec = _tiny("hft", use_kernel="on")
+    want = strip_times(run_scenario(spec).to_dict())
+    cli = Client(slots=2, batch_width=16, verify_width=4)
+    got = cli.result(cli.submit(spec))
+    assert strip_times(got) == want
+
+
+def test_serve_two_device_mesh_bit_identical(tiny_hft, hft_golden):
+    """Serving with every chunk sharded over 2 (simulated host) devices must
+    reproduce the single-device standalone report exactly."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", """
+import json
+from repro.api import registry
+from repro.api.service import Client, strip_times
+tiny = registry["hft"].override(back_annotation=False, top_k=2,
+                                trace_params={"duration_s": 8e-5})
+cli = Client(slots=2, batch_width=16, verify_width=4, mesh=2)
+print(json.dumps(strip_times(cli.result(cli.submit(tiny)))))
+"""], env=env, cwd=REPO, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got == hft_golden
+
+
+def test_serve_bad_request_errors_without_killing_service(tiny_hft,
+                                                          monkeypatch):
+    import repro.api.service as service
+    eng = DSEServeEngine(slots=2, batch_width=16, verify_width=4)
+    with pytest.raises(KeyError):
+        eng.submit("no-such-scenario")         # unknown names fail loudly
+    # a spec that cannot build must fail its own request only: poison the
+    # problem builder for one submit, then serve a healthy request after
+    real = service.build_problem
+    monkeypatch.setattr(service, "build_problem",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("boom")))
+    bad = eng.submit(tiny_hft, seed=99)
+    while not bad.done:
+        eng.step()
+    assert bad.error is not None and "boom" in bad.error
+    monkeypatch.setattr(service, "build_problem", real)
+    ok = eng.submit(tiny_hft)
+    done = eng.run_until_drained()
+    assert ok in done and ok.report is not None
+    assert eng.counters["errors"] == 1
+
+
+def test_serve_cli_smoke(tmp_path):
+    """``spac serve`` end to end: repeats hit the cache, JSON lands on disk."""
+    from repro.api.cli import main
+    out = tmp_path / "served.json"
+    rc = main(["serve", "hft", "--repeat", "2", "--slots", "2",
+               "--batch-width", "16", "--verify-width", "4",
+               "--out", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert len(payload["requests"]) == 2
+    assert payload["stats"]["report_misses"] == 1
+    assert payload["stats"]["report_hits"] == 1
+    a, b = payload["requests"]
+    assert strip_times(a["report"]) == strip_times(b["report"])

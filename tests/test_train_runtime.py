@@ -186,3 +186,51 @@ def test_serve_greedy_matches_decode_loop(setup):
             if t >= len(toks) - 1:
                 toks.append(nxt)
     assert r.out == outs[:3]
+
+
+def test_serve_run_until_drained_returns_finished(setup):
+    """Regression: ``run_until_drained`` must hand back every completed
+    request exactly once, in completion order — it used to return [] always
+    (finished requests were dropped on slot free)."""
+    mesh, cfg, params, _, _ = setup
+    eng = ServeEngine(cfg, PLAN, mesh, params, slots=2, s_max=64)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                    max_new=2 + i) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_drained(max_ticks=200)
+    assert [r.rid for r in finished] == [0, 1, 2, 3]   # shorter gens land first
+    assert all(r.done for r in finished)
+    assert eng.run_until_drained(max_ticks=1) == []    # exactly-once harvest
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.submit(reqs[0])
+        eng.submit(reqs[0])                            # duplicate rid is loud
+
+
+def test_serve_tick_accounting_samples_prefill_final_logits(setup):
+    """The engine docstring's contract: prefill and decode share the tick,
+    the prefill-final logits are sampled (not discarded), so a request takes
+    exactly ``len(prompt) + max_new - 1`` ticks for ``max_new`` tokens."""
+    mesh, cfg, params, _, _ = setup
+    eng = ServeEngine(cfg, PLAN, mesh, params, slots=1, s_max=32)
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    r = Request(rid=0, prompt=prompt, max_new=4)
+    eng.submit(r)
+    ticks = 0
+    while not r.done:
+        eng.step()
+        ticks += 1
+        assert ticks < 64
+    assert ticks == len(prompt) + r.max_new - 1
+    assert len(r.out) == r.max_new
+    # first output token appears on tick len(prompt): the tick that feeds
+    # the last prompt token also samples from its logits
+    eng2 = ServeEngine(cfg, PLAN, mesh, params, slots=1, s_max=32)
+    r2 = Request(rid=0, prompt=prompt, max_new=4)
+    eng2.submit(r2)
+    for _ in range(len(prompt) - 1):
+        eng2.step()
+    assert r2.out == []                 # still prefilling
+    eng2.step()
+    assert len(r2.out) == 1             # prefill-final tick sampled
