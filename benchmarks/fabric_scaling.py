@@ -1,0 +1,97 @@
+"""Fabric hop-composition scaling: verify throughput across topology shapes.
+
+Sweeps ``evaluate_fabric_batched`` over topologies of increasing hop depth
+and tier count — a 1-node ring (the single-switch identity), a 4-node ring
+(1 tier, up to 3 traversals), a 2-tier leaf/spine and a k=4 fat-tree — and
+reports candidates/sec plus the hop-normalised rate (cand*hops/s), which is
+the honest cost metric: a 3-hop fabric runs each batched engine up to
+3x per packet, so raw cand/s is expected to fall roughly with mean hops.
+
+Correctness is asserted, not sampled: the 1-node ring must reproduce the
+direct ``run_netsim_batched`` call bit-for-bit (drops to the packet,
+latencies to the ulp) before any throughput number is emitted — a rate
+measured on a diverged composition never lands in ``BENCH_dse.json``.
+
+    python -m benchmarks.fabric_scaling
+"""
+
+import numpy as np
+
+from repro.core import ArchRequest, ForwardTableKind, VOQKind, bind, \
+    compressed_protocol, enumerate_candidates
+from repro.fabric import (FatTree, LeafSpine, Ring, evaluate_fabric_batched,
+                          fabric_routes)
+from repro.sim.batched_netsim import run_netsim_batched
+from repro.traces import uniform
+
+from .common import emit, timed
+
+BOUND = bind(compressed_protocol(addr_bits=4, length_bits=12), flit_bits=256)
+BATCH = 16
+DEPTHS = (4, 16, 64, 256)
+
+#: name -> topology, ordered by hop depth x tier count
+TOPOLOGIES = {
+    "ring1": Ring(n_nodes=1, hosts_per_node=8),
+    "ring4": Ring(n_nodes=4, hosts_per_node=2),
+    "leafspine": LeafSpine(leaves=2, spines=3, hosts_per_leaf=2),
+    "fattree4": FatTree(4),
+}
+
+
+def _tier_batch(topo):
+    """BATCH per-tier design tuples: one NxN/MBH template per tier degree,
+    VOQ depth cycled over DEPTHS so the batch exercises distinct dynamics."""
+    bases = []
+    for tier in topo.tiers:
+        base = [a for a in enumerate_candidates(
+                    ArchRequest(n_ports=tier.degree, addr_bits=4,
+                                fwd=ForwardTableKind.MULTIBANK_HASH))
+                if a.voq is VOQKind.NXN][0]
+        bases.append(base)
+    return [tuple(b.with_depth(DEPTHS[i % len(DEPTHS)]) for b in bases)
+            for i in range(BATCH)]
+
+
+def _assert_identity(topo, tr, cands):
+    """1-node ring == direct engine, bitwise."""
+    direct = run_netsim_batched([c[0] for c in cands], BOUND, tr,
+                                back_annotation=False)
+    fabric = evaluate_fabric_batched(
+        topo, cands, [(BOUND,) for _ in cands], tr, back_annotation=False)
+    for d, f in zip(direct, fabric):
+        if (f.drop_rate != d.drop_rate
+                or not np.array_equal(f.meta["latency_full_ns"],
+                                      d.meta["latency_full_ns"])):
+            raise RuntimeError("1-hop fabric diverged from the direct "
+                               "engine; refusing to benchmark")
+
+
+def run():
+    out = {"batch": BATCH, "depths": list(DEPTHS), "topologies": {}}
+    for name, topo in TOPOLOGIES.items():
+        tr = uniform(seed=0, n_ports=topo.n_hosts)
+        cands = _tier_batch(topo)
+        bounds = [tuple(BOUND for _ in topo.tiers) for _ in cands]
+        if name == "ring1":
+            _assert_identity(topo, tr, cands)
+        routes = fabric_routes(topo, tr)
+        mean_hops = float(routes.n_hops.mean())
+        _, us = timed(evaluate_fabric_batched, topo, cands, bounds, tr,
+                      back_annotation=False)
+        cps = BATCH / (us * 1e-6)
+        out["topologies"][name] = {
+            "n_tiers": topo.n_tiers, "n_hosts": topo.n_hosts,
+            "mean_hops": mean_hops, "max_hops": int(routes.max_hops),
+            "cands_per_sec": cps, "cand_hops_per_sec": cps * mean_hops,
+        }
+        emit(f"fabric_scaling/{name}", us / BATCH,
+             f"{cps:.0f} cand/s over B={BATCH}; {topo.n_tiers} tier(s); "
+             f"mean_hops={mean_hops:.2f}; "
+             f"{cps * mean_hops:.0f} cand*hops/s")
+    emit("fabric_scaling/identity_1hop", 0.0, "bitwise vs direct engine: ok")
+    return out
+
+
+if __name__ == "__main__":
+    run()

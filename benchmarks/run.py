@@ -19,9 +19,9 @@ import sys
 import time
 import traceback
 
-from . import (dse_throughput, fig1_sensitivity, fig6_fidelity, fig7_dse_pareto,
-               fig8_scaling, mesh_scaling, moe_fabric, netsim_kernel,
-               roofline_table, search_quality, serve_throughput,
+from . import (dse_throughput, fabric_scaling, fig1_sensitivity, fig6_fidelity,
+               fig7_dse_pareto, fig8_scaling, mesh_scaling, moe_fabric,
+               netsim_kernel, roofline_table, search_quality, serve_throughput,
                table1_resources, table2_adaptation)
 
 SUITES = {
@@ -48,6 +48,9 @@ SUITES = {
     # aggregate stage-2 cand/s >= the batched campaign path, mean request
     # latency far below 64 serial runs, cache hit counters asserted
     "serve": serve_throughput.run,
+    # multi-hop fabric verify over ring/leaf-spine/fat-tree topologies:
+    # cand/s + hop-normalised cand*hops/s, 1-hop bitwise identity asserted
+    "fabric_scaling": fabric_scaling.run,
 }
 
 DEFAULT_JSON = "BENCH_dse.json"

@@ -26,6 +26,10 @@ Codes (the table in ``docs/architecture.md`` mirrors this):
     (a gene the decode canonicalises away, wasting genome bits).
   * ``SPAC105`` info/error — co-design space size and statically feasible
     layout fraction; error when zero layouts survive.
+  * ``SPAC106`` error — fabric topology addressability: the routing field
+    must address the *fabric host count* (not one switch's ``n_ports``),
+    every tier's port count must match the topology's degree, and the
+    trace must emit fabric host ids.
 
 Comm-domain scenarios get the spec-shape checks only (their fabric model
 has no port-addressing or FPGA-resource analogue), so every registry
@@ -51,6 +55,7 @@ SPEC_CODES = {
     "SPAC103": "resource budget below the minimal resource plan",
     "SPAC104": "dead co-design gene / inert search dimension",
     "SPAC105": "co-design space size and feasible-fraction estimate",
+    "SPAC106": "fabric topology addressability / tier-degree mismatch",
 }
 
 #: full enumeration of the layout space is capped here; larger spaces get
@@ -210,6 +215,91 @@ def _check_space_fraction(scenario, space) -> List[Diagnostic]:
         f"dimensions on top", loc)]
 
 
+def _check_topology(scenario, bound, space) -> List[Diagnostic]:
+    """SPAC106 — multi-hop fabric shape rules.  Exactly one of ``bound``
+    (point protocol) / ``space`` (co-design space) is non-None.
+
+    A topology changes the addressing target: packets carry *fabric host*
+    ids end-to-end, so the routing field must cover ``topology.n_hosts``
+    even though each individual switch only exposes ``degree`` ports.
+    ``_validate_addressing`` in the runner enforces the same rule at build
+    time; this surfaces it statically with the topology named."""
+    from repro.core.dsl import address_width_error
+    out: List[Diagnostic] = []
+    topo = scenario.topology.build()
+    n = topo.n_hosts
+    need = max(1, (n - 1).bit_length())
+
+    if space is not None:
+        for f in space.fields:
+            if f.semantic != "routing_key":
+                continue
+            live = [b for b in f.bits if b and address_width_error(
+                "routing_key", f.name, b, n) is None]
+            if not live:
+                out.append(Diagnostic(
+                    "SPAC106", "error",
+                    f"no width choice of routing field {f.name!r} ({f.bits}) "
+                    f"can address the fabric's {n} hosts (topology "
+                    f"{topo.kind!r}) — one switch's n_ports="
+                    f"{scenario.arch.n_ports} is not the addressing target",
+                    f"protocol.{f.name}",
+                    hint=f"add a routing width >= {need} bits; multi-hop "
+                         f"routes are keyed by destination *host* id"))
+    elif bound is not None:
+        for sem in ("routing_key", "src_key"):
+            if not bound.has(sem):
+                continue
+            f = bound.protocol.field(bound.semantics[sem])
+            if address_width_error(sem, f.name, f.bits, n) is not None:
+                out.append(Diagnostic(
+                    "SPAC106", "error",
+                    f"{sem} field {f.name!r} ({f.bits} bits) cannot address "
+                    f"the fabric's {n} hosts (topology {topo.kind!r}); with "
+                    f"a topology, addressing is checked against the host "
+                    f"count, not one switch's n_ports="
+                    f"{scenario.arch.n_ports}",
+                    f"protocol.{f.name}",
+                    hint=f"widen {f.name!r} to >= {need} bits — endpoints "
+                         f"are fabric host ids, so a single switch's port "
+                         f"width is not enough"))
+
+    for t, tier in enumerate(topo.tiers):
+        if tier.degree != scenario.arch.n_ports:
+            out.append(Diagnostic(
+                "SPAC106", "error",
+                f"tier {t} ({tier.name!r}) of topology {topo.kind!r} has "
+                f"degree {tier.degree} but arch.n_ports="
+                f"{scenario.arch.n_ports} — every tier's switches must "
+                f"expose exactly the topology's per-tier port count",
+                "arch.n_ports",
+                hint=f"set arch.n_ports={tier.degree}; the fabric problem "
+                     f"sizes each tier to its degree and a mismatched "
+                     f"template means the addr/policy menu was shaped for "
+                     f"the wrong radix"))
+
+    tr = scenario.trace
+    tr_ports = None
+    if tr.generator is not None:
+        tr_ports = tr.params.get("n_ports")
+        if tr_ports is None:
+            from repro.traces.workloads import WORKLOADS
+            gen = WORKLOADS.get(tr.generator)
+            if gen is not None:
+                p = inspect.signature(gen).parameters.get("n_ports")
+                if p is not None and p.default is not inspect.Parameter.empty:
+                    tr_ports = p.default
+    if tr_ports is not None and int(tr_ports) != n:
+        out.append(Diagnostic(
+            "SPAC106", "error",
+            f"trace generator emits {int(tr_ports)} endpoint ids but "
+            f"topology {topo.kind!r} has {n} hosts — multi-hop routing "
+            f"needs src/dst in [0, {n})", "trace.n_ports",
+            hint=f"set trace params n_ports={n} so packets target fabric "
+                 f"hosts"))
+    return out
+
+
 def _check_sla(scenario, bound, min_header_bytes: int) -> List[Diagnostic]:
     out = []
     reports = _min_reports(scenario, bound)
@@ -317,6 +407,8 @@ def check_scenario(scenario) -> List[Diagnostic]:
         if scenario.search is not None or scenario.co_design:
             diags.extend(_check_inert_arch_dims(scenario))
         diags.extend(_check_space_fraction(scenario, space))
+        if scenario.topology is not None:
+            diags.extend(_check_topology(scenario, None, space))
         # price the SLA/budget bounds at the widest layout (bindable iff any
         # is) but serialize the *narrowest* feasible header on the wire
         try:
@@ -340,6 +432,8 @@ def check_scenario(scenario) -> List[Diagnostic]:
             diags.append(Diagnostic("SPAC100", "error", str(e), "protocol"))
             return diags
         diags.extend(_check_addressing_point(scenario, bound))
+        if scenario.topology is not None:
+            diags.extend(_check_topology(scenario, bound, None))
         min_header_bytes = bound.protocol.header_bytes
 
     diags.extend(_check_sla(scenario, bound, min_header_bytes))

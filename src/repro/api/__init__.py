@@ -13,13 +13,14 @@ from .registry import ScenarioRegistry, registry
 from .runner import (CampaignReport, ScenarioReport, build_bound,
                      build_problem, run_campaign, run_scenario)
 from .scenario import (CommModelSpec, Fidelity, FieldSpec, PROTOCOL_BUILDERS,
-                       ProtocolSpec, Scenario, SearchSpec, TraceSpec)
+                       ProtocolSpec, Scenario, SearchSpec, TopologySpec,
+                       TraceSpec)
 from .service import Client, DSEServeEngine, ServeRequest, strip_times
 
 __all__ = [
     "CampaignReport", "Client", "CommModelSpec", "DSEServeEngine",
     "Fidelity", "FieldSpec", "PROTOCOL_BUILDERS", "ProtocolSpec", "Scenario",
     "ScenarioRegistry", "ScenarioReport", "ServeRequest", "SearchSpec",
-    "TraceSpec", "build_bound", "build_problem", "registry", "run_campaign",
-    "run_scenario", "strip_times",
+    "TopologySpec", "TraceSpec", "build_bound", "build_problem", "registry",
+    "run_campaign", "run_scenario", "strip_times",
 ]

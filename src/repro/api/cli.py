@@ -5,6 +5,9 @@
     spac check hft                             # static diagnostics (SPAC1xx)
     spac check my_scenario.json --format json
     spac lint src tests benchmarks             # determinism lint (SPAC2xx)
+    spac ingest capture.csv -o capture.npz     # pcap/CSV capture -> Trace
+    spac ingest lan.pcap --stage "filter:min_payload=64" \
+        --stage "incast:dst=0,n_senders=6,n_packets=128" --seed 7
     spac run hft --sla-p99-ns 5000             # one scenario, with overrides
     spac run my_scenario.json --out report.json
     spac run hft --search nsga2 --generations 10 --search-seed 0
@@ -32,6 +35,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any, Dict, Mapping, Optional, Sequence
 
@@ -96,6 +100,47 @@ def _parse_kv(pairs: Optional[Sequence[str]]) -> Dict[str, Any]:
         except json.JSONDecodeError:
             out[k] = v
     return out
+
+
+def _split_stage_params(s: str):
+    """Split ``key=val,key=val`` on top-level commas only, so JSON list/dict
+    values (``ports=[0,1]``, ``mapping={"3": 0}``) pass through intact."""
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _parse_stage(spec: str):
+    """CLI ``--stage kind:key=val,...`` -> (kind, params).  Values parse as
+    JSON literals, else strings; syntax errors raise ``ValueError`` so
+    ``spac ingest`` can exit with the usage code (2)."""
+    kind, _, rest = spec.partition(":")
+    if not kind:
+        raise ValueError(f"--stage {spec!r}: empty stage kind")
+    params: Dict[str, Any] = {}
+    for item in _split_stage_params(rest):
+        if not item.strip():
+            continue
+        if "=" not in item:
+            raise ValueError(
+                f"--stage {spec!r}: expected key=value, got {item!r}")
+        k, v = item.split("=", 1)
+        try:
+            params[k.strip()] = json.loads(v)
+        except json.JSONDecodeError:
+            params[k.strip()] = v
+    return kind, params
 
 
 def _load_scenario(target: str):
@@ -314,6 +359,32 @@ def build_parser() -> argparse.ArgumentParser:
     tp.add_argument("--list-rules", action="store_true",
                     help="print the rule catalogue and exit")
 
+    ip = sub.add_parser(
+        "ingest",
+        help="pcap/CSV capture -> Trace .npz, through a declarative stage "
+             "pipeline (filter/remap_ports/rescale_time/clip) plus "
+             "generative stressors (incast/zipf_drift/diurnal); exits 0 "
+             "ok / 2 malformed input")
+    ip.add_argument("capture", help="input .pcap/.cap or .csv path")
+    ip.add_argument("-o", "--out", default=None, metavar="FILE",
+                    help="output .npz path (default: capture stem + .npz)")
+    ip.add_argument("--name", default=None,
+                    help="trace name recorded in the .npz (default: stem)")
+    ip.add_argument("--n-ports", type=int, default=None,
+                    help="declared endpoint count (default: inferred from "
+                         "the max src/dst id seen)")
+    ip.add_argument("--link-gbps", type=float, default=100.0,
+                    help="link rate the trace models (default 100)")
+    ip.add_argument("--stage", action="append", metavar="KIND[:K=V,...]",
+                    help="pipeline stage, repeatable and order-preserving; "
+                         "values are JSON literals, e.g. "
+                         "--stage 'clip:max_packets=1000' "
+                         "--stage 'incast:dst=0,n_senders=4,n_packets=64'")
+    ip.add_argument("--seed", type=int, default=0,
+                    help="pipeline seed; stage i draws an independent "
+                         "stream from (seed, i), so results are "
+                         "bit-reproducible")
+
     rp = sub.add_parser("run", help="run one scenario")
     rp.add_argument("scenario", help="registry name or .json path")
     _add_override_flags(rp)
@@ -405,6 +476,31 @@ def _cmd_run(args) -> int:
             json.dump(report.to_dict(), f, indent=2)
         print(f"wrote report to {args.out}")
     return 0 if report.best is not None else 1
+
+
+def _cmd_ingest(args) -> int:
+    from repro.analysis.diagnostics import EXIT_USAGE
+    from repro.traces.ingest import Pipeline, ingest
+    try:
+        pipe = Pipeline(seed=args.seed)
+        for spec in args.stage or ():
+            kind, params = _parse_stage(spec)
+            pipe = pipe.then(kind, **params)
+        tr = ingest(args.capture,
+                    pipeline=pipe if pipe.stages else None,
+                    name=args.name, n_ports=args.n_ports,
+                    link_gbps=args.link_gbps)
+    except (ValueError, OSError) as e:
+        # malformed capture/stage input is a usage error (2), matching
+        # ``spac check``'s convention for input that never became runnable
+        print(f"spac ingest: {e}", file=sys.stderr)
+        return EXIT_USAGE
+    out = args.out or (os.path.splitext(args.capture)[0] + ".npz")
+    tr.save(out)
+    dur_us = ((tr.time_s[-1] - tr.time_s[0]) * 1e6) if len(tr.time_s) else 0.0
+    print(f"wrote {out}: {len(tr.time_s)} packets, {tr.n_ports} ports, "
+          f"{dur_us:.1f} us span, {tr.link_gbps:g} Gbps")
+    return 0
 
 
 def _cmd_check(args) -> int:
@@ -535,8 +631,8 @@ def _cmd_serve(args) -> int:
 def main(argv: Optional[Sequence[str]] = None) -> int:
     args = build_parser().parse_args(argv)
     return {"list": _cmd_list, "show": _cmd_show, "check": _cmd_check,
-            "lint": _cmd_lint, "run": _cmd_run, "sweep": _cmd_sweep,
-            "serve": _cmd_serve}[args.cmd](args)
+            "lint": _cmd_lint, "ingest": _cmd_ingest, "run": _cmd_run,
+            "sweep": _cmd_sweep, "serve": _cmd_serve}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -53,9 +53,12 @@ def _validate_addressing(scenario: Scenario, bound: BoundProtocol) -> None:
     """Fail at scenario-build time if an address field cannot address every
     port — ``compressed_protocol(addr_bits=2)`` on an 8-port scenario used to
     run (and silently alias destinations via ``dst % n_ports``).  Same rule
-    the co-design stage-1 prune applies (``address_width_error``)."""
+    the co-design stage-1 prune applies (``address_width_error``).  On a
+    fabric scenario the routing field must address every *host in the
+    topology*, not one switch's ports (``spac check`` SPAC106)."""
     from repro.core.dsl import address_width_error
-    n = scenario.arch.n_ports
+    n = (scenario.topology.build().n_hosts if scenario.topology is not None
+         else scenario.arch.n_ports)
     for sem in ("routing_key", "src_key"):
         if not bound.has(sem):
             continue
@@ -71,6 +74,11 @@ def _default_budget(scenario: Scenario) -> ResourceBudget:
     if scenario.domain == "comm":
         return ResourceBudget({"bytes_per_device": 4e9})
     from repro.sim.resources import ALVEO_U45N
+    if scenario.topology is not None:
+        # fabric resources are summed over every switch; the default budget
+        # is one FPGA card per node
+        n_nodes = sum(t.n_nodes for t in scenario.topology.build().tiers)
+        return ResourceBudget({k: v * n_nodes for k, v in ALVEO_U45N.items()})
     return ResourceBudget(dict(ALVEO_U45N))
 
 
@@ -118,6 +126,36 @@ def build_problem(
         return _build_comm_problem(scenario), scenario.sla, budget
     from repro.sim.switch_problem import SwitchDSEProblem
     tr = trace if trace is not None else scenario.trace.build()
+    if scenario.topology is not None:
+        from repro.fabric import FabricDSEProblem
+        topo = scenario.topology.build()
+        if scenario.co_design:
+            if scenario.search is None:
+                raise ValueError(
+                    f"scenario {scenario.name!r}: co_design joint spaces are "
+                    "generational-search territory — set a SearchSpec "
+                    "(spac run --co-design --search nsga2)")
+            problem = FabricDSEProblem(
+                topo, scenario.arch, None, tr,
+                back_annotation=scenario.fidelity.back_annotation,
+                features=features,
+                verify_engine=scenario.fidelity.verify_engine,
+                use_kernel=scenario.fidelity.use_kernel,
+                protocol_space=scenario.protocol.space(),
+                binding=scenario.semantic_binding(),
+                flit_bits=scenario.flit_bits,
+                mesh=mesh)
+            return problem, scenario.sla, budget
+        bound = build_bound(scenario)
+        _validate_addressing(scenario, bound)
+        problem = FabricDSEProblem(
+            topo, scenario.arch, bound, tr,
+            back_annotation=scenario.fidelity.back_annotation,
+            features=features,
+            verify_engine=scenario.fidelity.verify_engine,
+            use_kernel=scenario.fidelity.use_kernel,
+            mesh=mesh)
+        return problem, scenario.sla, budget
     if scenario.co_design:
         if scenario.search is None:
             raise ValueError(
@@ -156,13 +194,23 @@ def _short(cand: Any) -> str:
     return fn() if callable(fn) else repr(cand)
 
 
-def _verify_dict(v: VerifyResult) -> Dict[str, float]:
-    return {
+def _verify_dict(v: VerifyResult) -> Dict[str, Any]:
+    d: Dict[str, Any] = {
         "p99_latency_ns": float(v.p99_latency_ns),
         "mean_latency_ns": float(v.mean_latency_ns),
         "drop_rate": float(v.drop_rate),
         "throughput_gbps": float(v.throughput_gbps),
     }
+    fab = v.meta.get("fabric") if isinstance(v.meta, dict) else None
+    if fab is not None:
+        # end-to-end multi-hop metrics the single-switch path cannot express
+        d["fabric"] = {
+            "p50_latency_ns": float(fab["p50_latency_ns"]),
+            "max_hops": int(fab["max_hops"]),
+            "mean_hops": float(fab["mean_hops"]),
+            "per_tier_drops": [int(x) for x in fab["per_tier_drops"]],
+        }
+    return d
 
 
 def _protocol_dict(bound: Optional[BoundProtocol]) -> Optional[Dict[str, Any]]:
@@ -446,6 +494,10 @@ def _switch_group_key(s: Scenario) -> str:
         "back_annotation": s.fidelity.back_annotation,
         "use_kernel": s.fidelity.use_kernel,
         "co_design": s.co_design,
+        # a fabric problem's batched calls evaluate per-tier designs over a
+        # topology-specific hop decomposition — only identical topologies
+        # (incl. the single-switch None) may share one call
+        "topology": (s.topology.to_dict() if s.topology is not None else None),
     }, sort_keys=True)
 
 

@@ -37,6 +37,7 @@ from repro.core.dsl import (CODESIGN_ADDR_CHOICES, CODESIGN_LENGTH_CHOICES,
                             compressed_protocol, compressed_protocol_space,
                             ethernet_ipv4_udp)
 from repro.core.search import SearchSpec
+from repro.fabric.topology import TopologySpec
 from repro.launch.mesh import MeshSpec
 
 __all__ = [
@@ -48,6 +49,7 @@ __all__ = [
     "MeshSpec",
     "Scenario",
     "SearchSpec",
+    "TopologySpec",
     "PROTOCOL_BUILDERS",
 ]
 
@@ -455,6 +457,11 @@ class Scenario:
     #: None (the default, and what every golden snapshot records) is the
     #: serial path — results are mesh-invariant either way
     mesh: Optional[MeshSpec] = None
+    #: optional multi-hop fabric: the scenario evaluates a *network* of
+    #: switches (``repro.fabric``) — each topology tier is its own design
+    #: point, the trace routes hop-by-hop, and objectives are end-to-end
+    #: (switch domain only; None keeps the single-switch path)
+    topology: Optional[TopologySpec] = None
     notes: str = ""
 
     def __post_init__(self):
@@ -462,6 +469,9 @@ class Scenario:
             object.__setattr__(self, "mesh", MeshSpec.coerce(self.mesh))
         if self.domain not in ("switch", "comm"):
             raise ValueError(f"unknown domain {self.domain!r}")
+        if self.topology is not None and self.domain != "switch":
+            raise ValueError(f"scenario {self.name!r}: topology applies to "
+                             "the switch domain only")
         if self.domain == "switch" and self.arch is None:
             raise ValueError(f"scenario {self.name!r}: switch domain needs arch")
         if self.domain == "comm" and self.comm is None:
@@ -510,6 +520,8 @@ class Scenario:
             d["co_design"] = True
         if self.mesh is not None:
             d["mesh"] = self.mesh.to_dict()
+        if self.topology is not None:
+            d["topology"] = self.topology.to_dict()
         if self.notes:
             d["notes"] = self.notes
         return d
@@ -538,6 +550,8 @@ class Scenario:
             co_design=bool(d.get("co_design", False)),
             mesh=(MeshSpec.from_dict(d["mesh"])
                   if d.get("mesh") is not None else None),
+            topology=(TopologySpec.from_dict(d["topology"])
+                      if d.get("topology") is not None else None),
             notes=d.get("notes", ""),
         )
 

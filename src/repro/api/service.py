@@ -102,6 +102,7 @@ def _problem_key(scenario: Scenario) -> str:
         "flit_bits": scenario.flit_bits,
         "binding": d.get("binding"),
         "trace": d.get("trace"),
+        "topology": d.get("topology"),
         "back_annotation": fid.back_annotation,
         "verify_engine": fid.verify_engine,
         "use_kernel": fid.use_kernel,

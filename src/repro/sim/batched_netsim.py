@@ -184,7 +184,8 @@ def _empty_result(hw: HardwareParams) -> VerifyResult:
     return VerifyResult(
         p99_latency_ns=math.inf, mean_latency_ns=math.inf, drop_rate=0.0,
         throughput_gbps=0.0,
-        meta={"latency_ns": np.zeros(0), "delivered": 0, "offered": 0,
+        meta={"latency_ns": np.zeros(0), "latency_full_ns": np.zeros(0),
+              "delivered": 0, "offered": 0,
               "hw": hw, "engine": "batched_netsim"})
 
 
@@ -285,7 +286,8 @@ def _run_group(archs, bounds, trace, hw_list, cfg,
             mean_latency_ns=float(lat.mean()) if lat.size else math.inf,
             drop_rate=int((~admit[b]).sum()) / max(m, 1),
             throughput_gbps=delivered_bits / duration / 1e9,
-            meta={"latency_ns": lat, "delivered": int(done.sum()),
+            meta={"latency_ns": lat, "latency_full_ns": latency,
+                  "delivered": int(done.sum()),
                   "offered": int(m), "hw": hw, "engine": "batched_netsim"},
         ))
     return out
@@ -308,7 +310,8 @@ def _metrics_result(end_b, admit_b, order, t0, wire_e, t0_min, cfg, hw,
         mean_latency_ns=float(lat.mean()) if lat.size else math.inf,
         drop_rate=int((~admit_b).sum()) / max(m, 1),
         throughput_gbps=delivered_bits / duration / 1e9,
-        meta={"latency_ns": lat, "delivered": int(done.sum()),
+        meta={"latency_ns": lat, "latency_full_ns": latency,
+              "delivered": int(done.sum()),
               "offered": int(m), "hw": hw, "engine": "batched_netsim"},
     )
 

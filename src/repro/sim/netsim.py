@@ -164,6 +164,7 @@ def run_netsim(
         mean_latency_ns=float(lat.mean()) if lat.size else math.inf,
         drop_rate=drops / max(m, 1),
         throughput_gbps=delivered_bits / duration / 1e9,
-        meta={"latency_ns": lat, "delivered": int(done.sum()), "offered": int(m),
+        meta={"latency_ns": lat, "latency_full_ns": latency,
+              "delivered": int(done.sum()), "offered": int(m),
               "hw": hw, "engine": "netsim"},
     )

@@ -190,6 +190,14 @@ class SwitchDSEProblem(DSEProblem):
     def co_design(self) -> bool:
         return self.protocol_space is not None
 
+    @property
+    def addressing_ports(self) -> int:
+        """Endpoint count the routing field must address.  A standalone
+        switch addresses its own ports; fabric tier sub-problems override
+        this with the *fabric* host count — a tier switch's routing field
+        must name any host in the network, not just its local ports."""
+        return self.request.n_ports
+
     @staticmethod
     def _arch(c) -> SwitchArch:
         return c.arch if isinstance(c, CoDesignCandidate) else c
@@ -291,7 +299,7 @@ class SwitchDSEProblem(DSEProblem):
         key = self.protocol_space.layout_key(widths)
         reason = self.protocol_space.feasible(
             widths,
-            n_ports=self.request.n_ports,
+            n_ports=self.addressing_ports,
             max_payload_bytes=self._max_payload,
             variable_payload=self._variable_payload,
             needs_seq=self.require_seq,

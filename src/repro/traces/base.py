@@ -74,6 +74,40 @@ class Trace:
 
 
 def merge(name: str, traces, n_ports: int, link_gbps: float = 100.0) -> Trace:
+    """Combine per-port-domain sub-traces into one trace.
+
+    The inputs must be one consistent capture: every sub-trace on the same
+    link rate (service times and hop composition are priced against a single
+    ``link_gbps``) and on *disjoint* port ids (two sub-traces claiming the
+    same endpoint would silently interleave two hosts' traffic into one) —
+    both are validated here because multi-hop fabric composition depends on
+    them.
+    """
+    traces = list(traces)
+    if not traces:
+        raise ValueError("merge() needs at least one trace")
+    for t in traces:
+        if t.link_gbps != link_gbps:
+            raise ValueError(
+                f"merge link_gbps mismatch: merged trace declares "
+                f"{link_gbps} Gbps but input {t.name!r} carries "
+                f"{t.link_gbps} Gbps — resample one side first")
+    owner: dict = {}
+    for t in traces:
+        ports = np.union1d(np.unique(t.src), np.unique(t.dst))
+        for p in ports:
+            p = int(p)
+            if p in owner and owner[p] != t.name:
+                raise ValueError(
+                    f"merge port overlap: port id {p} appears in both "
+                    f"{owner[p]!r} and {t.name!r} — merged sub-traces must "
+                    f"cover disjoint port ids")
+            owner[p] = t.name
+        if ports.size and int(ports.max()) >= n_ports:
+            raise ValueError(
+                f"merge port out of range: input {t.name!r} uses port id "
+                f"{int(ports.max())} but the merged trace declares "
+                f"n_ports={n_ports}")
     return Trace(
         name=name,
         time_s=np.concatenate([t.time_s for t in traces]),

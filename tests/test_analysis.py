@@ -114,6 +114,42 @@ def test_check_codesign_space_is_info_only():
     assert exit_code(diags) == 0
 
 
+def test_check_fabric_topology_addressability():
+    """SPAC106: swapping fattree_dc's k=4 topology for k=8 makes 32 hosts —
+    the 4-bit routing/src fields, the 4-port tier template, and the 8-id
+    trace all stop matching the fabric, and each mismatch is named."""
+    from repro.api.scenario import TopologySpec
+    bad = dataclasses.replace(
+        registry["fattree_dc"], name="bad_fabric",
+        topology=TopologySpec.make("fattree", k=8))
+    diags = [d for d in check_scenario(bad) if d.code == "SPAC106"]
+    assert all(d.severity == "error" and d.hint for d in diags)
+    locs = {d.location for d in diags}
+    # routing + src addressability vs the *host* count, not n_ports
+    assert {"protocol.dst", "protocol.src"} <= locs
+    assert any("32 hosts" in d.message for d in diags)
+    # tier degree vs the arch template (both tiers of a k=8 tree have deg 8)
+    assert sum(1 for d in diags if d.location == "arch.n_ports") == 2
+    # trace endpoint ids vs the host count
+    assert "trace.n_ports" in locs
+
+
+def test_check_fabric_codesign_space_addressability():
+    """The space path of SPAC106: a widened protocol whose every routing
+    width is narrower than the host count is a dead fabric gene."""
+    from repro.api.scenario import TopologySpec
+    base = registry["fattree_dc"]
+    wide = dataclasses.replace(base, protocol=base.protocol.widen())
+    # 3-bit max routing addresses 8 hosts of k=4; k=8's 32 hosts need 5 bits
+    dead = _with_protocol_params(
+        dataclasses.replace(wide, name="bad_fabric_space",
+                            topology=TopologySpec.make("fattree", k=8)),
+        addr_bits=(2, 4))
+    hits = [d for d in check_scenario(dead) if d.code == "SPAC106"
+            and d.location == "protocol.dst"]
+    assert hits and "no width choice" in hits[0].message
+
+
 def test_check_registry_all_clean():
     """Acceptance: every registered workload (switch and comm) exits 0."""
     for name in registry.names():

@@ -67,6 +67,10 @@ SCENARIOS = {
     "hft_codesign": lambda: registry["hft"].override(
         back_annotation=False, co_design=True,
         search=SearchSpec(population=16, generations=4, seed=7)),
+    # multi-hop fabric: the snapshot carries end-to-end p50/p99 and per-tier
+    # drop counts the single-switch path cannot express
+    "fattree_dc": lambda: registry["fattree_dc"].override(
+        back_annotation=False),
 }
 
 
@@ -190,6 +194,40 @@ print(json.dumps(report.to_dict()))
     assert not errors, (
         "hft_nsga2 under a 2-device mesh drifted from the single-device "
         f"golden ({len(errors)} mismatch(es)):\n" + "\n".join(errors))
+
+
+@pytest.mark.parametrize("devices", [2, 8])
+def test_golden_fattree_mesh_invariant(devices):
+    """Hop-composed fabric evaluation must be bit-identical whether the
+    batched stages run on 1, 2, or 8 forced host devices: per-hop departures
+    feed the next hop, so any sharding drift would compound.  Diff against
+    the single-device golden — no regeneration allowed."""
+    path = os.path.join(GOLDEN_DIR, "fattree_dc.json")
+    if not os.path.exists(path):
+        pytest.fail(f"no golden report at {path}; generate with "
+                    "`pytest tests/test_golden.py --update-golden` "
+                    "(on a single device)")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run([sys.executable, "-c", f"""
+import json
+from repro.api import registry, run_scenario
+from repro.api.scenario import MeshSpec
+scenario = registry["fattree_dc"].override(back_annotation=False)
+report = run_scenario(scenario, mesh=MeshSpec(devices={devices}))
+print(json.dumps(report.to_dict()))
+"""], env=env, cwd=repo, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    with open(path) as f:
+        want = json.load(f)
+    errors = diff_reports(got, want)
+    assert not errors, (
+        f"fattree_dc under a {devices}-device mesh drifted from the "
+        f"single-device golden ({len(errors)} mismatch(es)):\n"
+        + "\n".join(errors))
 
 
 # --------------------------------------------------------------------------
